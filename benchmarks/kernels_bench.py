@@ -1,0 +1,51 @@
+"""Kernel micro-benchmarks (interpret-mode wall-times are NOT TPU times;
+reported for regression tracking of the reference paths)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _t(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    from repro.kernels.flash_attention.ops import flash_attention_reference
+    q = jax.random.normal(key, (1, 512, 8, 64))
+    k = jax.random.normal(key, (1, 512, 2, 64))
+    v = jax.random.normal(key, (1, 512, 2, 64))
+    rows.append({"bench": "kernel_ref", "column": "flash_attention",
+                 "layer": "S512", "kind": "fwd",
+                 "us_per_call": _t(lambda a, b, c: flash_attention_reference(
+                     a, b, c), q, k, v)})
+    from repro.kernels.paged_attention import paged_attention_reference
+    pk = jax.random.normal(key, (64, 32, 2, 64))
+    bt = jnp.arange(48).reshape(4, 12).astype(jnp.int32)
+    ln = jnp.full((4,), 360, jnp.int32)
+    qd = jax.random.normal(key, (4, 8, 64))
+    rows.append({"bench": "kernel_ref", "column": "paged_attention",
+                 "layer": "P12", "kind": "decode",
+                 "us_per_call": _t(lambda a: paged_attention_reference(
+                     a, pk, pk, bt, ln), qd)})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['bench']},{r['column']},{r['layer']},{r['kind']},"
+              f"{r['us_per_call']:.1f},-")
+
+
+if __name__ == "__main__":
+    main()

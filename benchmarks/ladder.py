@@ -1,0 +1,123 @@
+"""The paper's §IV-A top-down methodology as a benchmark harness.
+
+Columns (cumulative, mirroring Tables I/II):
+  upstream      TGT-style single-loop frontend + dict map + chained store
+  +frontend     multi-queue batched admission (ublk analogue), loop comm
+  +comm         slot-array (Messages Array) batched comm, chained store
+  +dbs          DBS replicas (the full modified engine)
+
+Rows (layer cuts): frontend-only (null backend) / without-storage (null
+storage) / full engine.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Engine, EngineConfig, Request, UpstreamEngine
+
+COLUMNS = ("upstream", "+frontend", "+comm", "+dbs")
+ROWS = ("frontend_only", "without_storage", "full_engine")
+
+
+def make_engine(column: str, row: str, *, payload_shape=(64,),
+                n_replicas: int = 2, page_blocks: int = 32,
+                n_extents: int = 4096, max_pages: int = 1024):
+    null_backend = row == "frontend_only"
+    null_storage = row == "without_storage"
+    kw = dict(payload_shape=payload_shape, n_replicas=n_replicas,
+              page_blocks=page_blocks, n_extents=n_extents,
+              max_pages=max_pages, null_backend=null_backend,
+              null_storage=null_storage)
+    if column == "upstream":
+        return UpstreamEngine(EngineConfig(**kw))
+    if column == "+frontend":
+        return Engine(EngineConfig(storage="chained", comm="loop", **kw))
+    if column == "+comm":
+        return Engine(EngineConfig(storage="chained", comm="slots", **kw))
+    if column == "+dbs":
+        return Engine(EngineConfig(storage="dbs", comm="slots", **kw))
+    raise ValueError(column)
+
+
+def run_ladder(*, n_requests: int = 512, payload_elems: int = 64,
+               kind: str = "mixed", pages: int = 256,
+               repeats: int = 1) -> Dict[str, Dict[str, float]]:
+    """Returns ops/sec for every (column, row) cell."""
+    payload = jnp.ones((payload_elems,), jnp.float32)
+    out: Dict[str, Dict[str, float]] = {}
+    rng = np.random.default_rng(0)
+    page_seq = rng.integers(0, pages, size=n_requests)
+    for col in COLUMNS:
+        out[col] = {}
+        for row in ROWS:
+            best = 0.0
+            for _ in range(repeats):
+                eng = make_engine(col, row, payload_shape=(payload_elems,),
+                                  max_pages=pages)
+                vol = eng.create_volume()
+                for i in range(n_requests):
+                    k = ("write" if (kind == "write" or
+                                     (kind == "mixed" and i % 2)) else "read")
+                    eng.submit(Request(req_id=i, kind=k, volume=vol,
+                                       page=int(page_seq[i]),
+                                       block=i % 8, payload=payload))
+                t0 = time.perf_counter()
+                done = eng.drain()
+                dt = time.perf_counter() - t0
+                assert done == n_requests, (col, row, done)
+                best = max(best, n_requests / dt)
+            out[col][row] = best
+    return out
+
+
+def snapshot_degradation(*, n_snapshots=(0, 4, 16, 64), n_reads: int = 256,
+                         pages: int = 64) -> Dict[str, List[dict]]:
+    """Reads vs snapshot count. Two metrics per point:
+
+    - ops/s (wall time; at CPU scale dict walks are ~ns, so this mostly
+      shows engine overheads),
+    - **layers touched per read** — the structural cost the paper describes
+      ("reads may have to go through the whole chain"): grows linearly for
+      the chained sparse-file-style store, constant 1 for DBS's flattened
+      in-memory extent map.
+    All data is written *before* the first snapshot, so chained reads must
+    walk to the bottom of the chain — the paper's worst case.
+    """
+    res: Dict[str, List[dict]] = {"chained": [], "dbs": []}
+    payload = jnp.ones((16,), jnp.float32)
+    rng = np.random.default_rng(0)
+    for col, key in (("+comm", "chained"), ("+dbs", "dbs")):
+        for ns in n_snapshots:
+            eng = make_engine(col, "full_engine", payload_shape=(16,),
+                              max_pages=pages, n_extents=pages * (ns + 2) + 64)
+            vol = eng.create_volume()
+            for p in range(pages):              # base data in the oldest layer
+                eng.submit(Request(req_id=p, kind="write", volume=vol,
+                                   page=p, block=0, payload=payload))
+            eng.drain()
+            for s in range(ns):                 # empty-ish newer layers
+                eng.snapshot(vol)
+                eng.submit(Request(req_id=0, kind="write", volume=vol,
+                                   page=0, block=0, payload=payload))
+                eng.drain()
+            for i in range(n_reads):
+                eng.submit(Request(req_id=i, kind="read", volume=vol,
+                                   page=int(rng.integers(1, pages)), block=0))
+            t0 = time.perf_counter()
+            done = eng.drain()
+            dt = time.perf_counter() - t0
+            if key == "chained":
+                store = eng.backend.stores[0]
+                walked = sum(s.layers_walked for s in eng.backend.stores)
+                nreads = sum(s.reads for s in eng.backend.stores)
+                depth = walked / max(nreads, 1)
+            else:
+                depth = 1.0                     # one table gather, always
+            res[key].append({"snapshots": ns, "ops_per_s": done / dt,
+                             "layers_per_read": depth})
+    return res

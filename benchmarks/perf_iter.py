@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Perf-iteration harness (§Perf hillclimb): re-lower one cell with plan
+overrides and report the roofline-term deltas vs the recorded baseline.
+
+  python -m benchmarks.perf_iter --arch granite-3-8b --shape train_4k \
+      --set microbatches=4 remat=none --tag fewer-microbatches
+
+Appends {baseline, variant, deltas} to results/perf_iters.json.
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--accounting", action="store_true", default=True)
+    ap.add_argument("--out", default="results/perf_iters.json")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.set)
+    r = run_cell(args.arch, args.shape, multi_pod=False,
+                 plan_overrides=overrides, accounting=args.accounting)
+    keep = {k: r[k] for k in
+            ("flops_per_device", "bytes_per_device",
+             "collective_bytes_per_device", "t_compute", "t_memory",
+             "t_collective", "bottleneck", "roofline_fraction",
+             "hlo_useful_ratio", "compile_s", "plan") if k in r}
+    rec = {"arch": args.arch, "shape": args.shape, "tag": args.tag,
+           "overrides": overrides, **keep}
+    print(json.dumps(rec, indent=1))
+    hist = []
+    if os.path.exists(args.out):
+        hist = json.load(open(args.out))
+    hist.append(rec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    json.dump(hist, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table renderer: reads dry-run JSONs and prints the per-cell
+three-term analysis (EXPERIMENTS.md §Roofline is generated from this)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load(path: str) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(results: List[dict], *, only_single_pod: bool = True) -> str:
+    lines = []
+    hdr = (f"{'arch:shape':44s} {'kind':8s} {'t_comp(s)':>10s} {'t_mem(s)':>10s}"
+           f" {'t_coll(s)':>10s} {'bottleneck':>11s} {'useful':>7s} {'roofl':>6s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") == "skipped":
+            if not r.get("multi_pod", False):
+                lines.append(f"{r['arch']+':'+r['shape']:44s} SKIP "
+                             f"({r['skipped'][:70]})")
+            continue
+        if r.get("status") == "error":
+            lines.append(f"{r['arch']+':'+r['shape']:44s} ERROR "
+                         f"{r.get('error','')[:70]}")
+            continue
+        if only_single_pod and r.get("multi_pod"):
+            continue
+        lines.append(
+            f"{r['arch']+':'+r['shape']:44s} {r['kind']:8s} "
+            f"{r['t_compute']:10.4f} {r['t_memory']:10.4f} "
+            f"{r['t_collective']:10.4f} {r['bottleneck']:>11s} "
+            f"{r['hlo_useful_ratio']:7.3f} {r['roofline_fraction']:6.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/roofline_single.json")
+    ap.add_argument("--all-meshes", action="store_true")
+    args = ap.parse_args()
+    print(render(load(args.json), only_single_pod=not args.all_meshes))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serve a small model with batched requests through the paged-DBS engine.
+
+Shows the serving data path of DESIGN.md: multi-queue admission -> slot
+table -> DBS page allocation (control plane) -> paged decode (data plane),
+with more requests than slots so continuous batching has to recycle.
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import dbs
+from repro.models import init_params
+from repro.serving import GenRequest, ServeEngine
+
+cfg = smoke_config("gemma2-2b")          # softcaps + local/global layers
+params = init_params(jax.random.PRNGKey(0), cfg)
+eng = ServeEngine(cfg, params, n_slots=4, max_len=96, n_queues=2)
+
+rng = np.random.default_rng(7)
+N = 10
+t0 = time.time()
+for rid in range(N):
+    eng.submit(GenRequest(
+        req_id=rid,
+        prompt=rng.integers(0, cfg.vocab_size, size=(6 + rid % 9,)),
+        max_new=8))
+
+outs = eng.run(max_steps=80)
+dt = time.time() - t0
+total = sum(len(v) for v in outs.values())
+print(f"served {N} requests / {total} tokens in {dt:.1f}s "
+      f"({total/dt:.1f} tok/s, {eng.n_slots} slots, "
+      f"{len(eng.frontend.queues)} admission queues)")
+for rid, toks in sorted(outs.items()):
+    print(f"  req {rid}: {toks}")
+st = dbs.stats(eng.state)
+print(f"DBS after drain: {st} (no extent leaks)")
+assert st["extents_used"] == 0

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+A granite-family decoder (~110M params) on synthetic Zipf data with the real
+training stack: chunked CE, remat, AdamW + warmup-cosine, replicated DBS
+checkpoints every 50 steps, straggler accounting. Loss should fall from
+~ln(V) toward the Zipf entropy.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+from repro.configs import ExecutionPlan
+from repro.configs.base import ArchConfig, ATTN_GLOBAL
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.training.trainer import Trainer
+
+CFG_100M = ArchConfig(
+    name="granite-100m", family="dense",
+    n_layers=8, d_model=640, n_heads=10, n_kv_heads=2, head_dim=64,
+    d_ff=2560, vocab_size=32_000, layer_pattern=(ATTN_GLOBAL,),
+    activation="silu", gated_mlp=True, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    plan = ExecutionPlan(remat="block", compute_dtype="bfloat16",
+                         param_dtype="float32", microbatches=1,
+                         logits_chunk=64)
+    dirs = [os.path.join(args.ckpt_dir, d) for d in "ab"]
+    for d in dirs:
+        os.makedirs(d, exist_ok=True)
+    data = Prefetcher(SyntheticLM(cfg.vocab_size, args.batch, args.seq),
+                      depth=2)
+    tr = Trainer(cfg, plan, data, ckpt_dirs=dirs, ckpt_every=50,
+                 lr=3e-4, warmup=50, total_steps=args.steps)
+    t0 = time.time()
+    hist = tr.run(args.steps)
+    dt = time.time() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"\n{args.steps} steps in {dt:.0f}s "
+          f"({toks/dt:.0f} tok/s on CPU), stragglers: {tr.straggler_events}")
+    for h in hist[:: max(1, len(hist) // 12)]:
+        print(f"  step {h['step']:4d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.2f} ({h['step_time_s']:.2f}s)")
+    print(f"final loss {hist[-1]['loss']:.4f} (start {hist[0]['loss']:.4f})")
+    tr.ckpt.close()
+    data.close()
+
+
+if __name__ == "__main__":
+    main()

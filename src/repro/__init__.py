@@ -1,0 +1,5 @@
+"""repro: Longhorn-engine-inspired distributed block storage for LLM state,
+reimagined for TPU pods in JAX — paged DBS KV pools, slot-array scheduling,
+multi-queue admission and replicated checkpoint volumes (see DESIGN.md)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.checkpoint.replicated import ReplicatedCheckpoint  # noqa: F401
+from repro.checkpoint.store import CheckpointStore  # noqa: F401

@@ -1,0 +1,12 @@
+# The paper's primary contribution: the optimized Longhorn engine layers,
+# adapted to the TPU data plane (see DESIGN.md):
+#   slots.py        Messages Array + ID-token channel (paper §IV-C)
+#   dbs.py          device-side Direct Block Store (paper §IV-D)
+#   frontend.py     multi-queue ublk-style admission vs TGT-style baseline
+#   replication.py  write-to-all / read-round-robin / rebuild (paper §III)
+#   engine.py       the composed engine + upstream baseline + null layers
+from repro.core import dbs, slots  # noqa: F401
+from repro.core.engine import Engine, EngineConfig, UpstreamEngine  # noqa: F401
+from repro.core.frontend import (MultiQueueFrontend, Request,  # noqa: F401
+                                 UpstreamFrontend)
+from repro.core.replication import ReplicaGroup  # noqa: F401

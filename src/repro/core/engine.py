@@ -1,0 +1,278 @@
+"""The engine: frontend -> controller -> replicas(DBS), per paper Fig. 2/3.
+
+``Engine`` composes the three optimized layers; ``UpstreamEngine`` is the
+faithful baseline (single-loop frontend, per-request dispatch, chained
+snapshot lookup on reads) so the benchmark ladder can reproduce Tables I/II.
+
+Null-layer switches implement the paper's §IV-A methodology:
+  null_backend  — requests complete at the controller (frontend-only run)
+  null_storage  — replicas ack without touching DBS (no-storage run)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbs
+from repro.core.frontend import MultiQueueFrontend, Request, UpstreamFrontend
+from repro.core.replication import ReplicaGroup
+
+
+@dataclass
+class EngineConfig:
+    n_replicas: int = 2
+    n_queues: int = 4            # ublk frontend hardware queues
+    n_slots: int = 256           # Messages Array size (max in-flight)
+    batch: int = 64              # admission batch
+    n_extents: int = 1024
+    max_volumes: int = 16
+    max_pages: int = 256
+    page_blocks: int = 32        # paper: 32 blocks per extent
+    payload_shape: Tuple[int, ...] = (64,)
+    null_backend: bool = False
+    null_storage: bool = False
+    storage: str = "dbs"         # dbs | chained (sparse-file-style baseline)
+    comm: str = "slots"          # slots (Messages Array) | loop (per-request)
+
+
+class Engine:
+    """Modified engine: multi-queue frontend + slot comm + DBS replicas.
+
+    ``storage="chained"`` swaps the replica backing store for the sparse-
+    file-style snapshot-chain store, and ``comm="loop"`` serializes request
+    handling through a per-request registry — the two knobs that let the
+    benchmark ladder reproduce the paper's cumulative columns.
+    """
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.frontend = MultiQueueFrontend(cfg.n_queues, cfg.n_slots, cfg.batch)
+        if cfg.null_backend:
+            self.backend = None
+        elif cfg.storage == "chained":
+            self.backend = ChainedReplicas(cfg)
+        else:
+            self.backend = ReplicaGroup(
+                cfg.n_replicas, cfg.n_extents, cfg.max_volumes, cfg.max_pages,
+                cfg.page_blocks, cfg.payload_shape,
+                null_storage=cfg.null_storage)
+        self.completed = 0
+
+    def create_volume(self) -> int:
+        if self.backend is None:
+            return 0
+        return self.backend.create_volume()
+
+    def snapshot(self, vol: int) -> None:
+        if self.backend is not None:
+            self.backend.snapshot(vol)
+
+    def submit(self, req: Request) -> None:
+        self.frontend.submit(req)
+
+    def _exec_write_batch(self, rs: List[Request]) -> None:
+        if self.cfg.storage == "chained":
+            for r in rs:
+                self.backend.write(r.volume, [r.page], [r.block],
+                                   [r.payload])
+            return
+        # fixed-shape vectorized write (padded to the admission batch)
+        n, cap = len(rs), self.cfg.batch
+        pad = cap - (n % cap) if n % cap else 0
+        vols = jnp.asarray([r.volume for r in rs] + [0] * pad, jnp.int32)
+        pages = jnp.asarray([r.page for r in rs] + [0] * pad, jnp.int32)
+        offs = jnp.asarray([r.block for r in rs] + [0] * pad, jnp.int32)
+        payload = jnp.stack(
+            [r.payload if r.payload is not None
+             else jnp.zeros(self.cfg.payload_shape) for r in rs]
+            + [jnp.zeros(self.cfg.payload_shape)] * pad)
+        mask = jnp.arange(n + pad) < n
+        for i in range(0, n + pad, cap):
+            s = slice(i, i + cap)
+            self.backend.write(vols[s], pages[s], offs[s], payload[s],
+                               mask=mask[s])
+
+    def pump(self) -> int:
+        """One controller iteration: admit a batch, execute it against the
+        replicas (writes mirrored / reads round-robin), complete the slots.
+        Returns the number of completed requests."""
+        slot_ids, reqs = self.frontend.poll_batch()
+        if not reqs:
+            return 0
+        if self.backend is not None:
+            if self.cfg.comm == "loop":
+                # the single loop function: one request at a time
+                for r in reqs:
+                    if r.kind == "write":
+                        self._exec_write_batch([r])
+                    else:
+                        self.backend.read(
+                            r.volume, jnp.asarray([r.page], jnp.int32),
+                            jnp.asarray([r.block], jnp.int32))
+            else:
+                writes = [r for r in reqs if r.kind == "write"]
+                reads = [r for r in reqs if r.kind == "read"]
+                if writes:
+                    self._exec_write_batch(writes)
+                if reads:
+                    if self.cfg.storage == "chained":
+                        self.backend.read(
+                            [r.volume for r in reads],
+                            [r.page for r in reads],
+                            [r.block for r in reads])
+                    else:
+                        n, cap = len(reads), self.cfg.batch
+                        pad = cap - (n % cap) if n % cap else 0
+                        vols = jnp.asarray(
+                            [r.volume for r in reads] + [0] * pad, jnp.int32)
+                        pages = jnp.asarray(
+                            [r.page for r in reads] + [0] * pad, jnp.int32)
+                        offs = jnp.asarray(
+                            [r.block for r in reads] + [0] * pad, jnp.int32)
+                        for i in range(0, n + pad, cap):
+                            s = slice(i, i + cap)
+                            self.backend.read(vols[s], pages[s], offs[s])
+        done = self.frontend.complete(slot_ids)
+        self.completed += len(done)
+        return len(done)
+
+    def drain(self, max_iters: int = 100_000) -> int:
+        n = 0
+        for _ in range(max_iters):
+            got = self.pump()
+            if got == 0 and self.frontend.depth() == 0:
+                break
+            n += got
+        return n
+
+
+class ChainedReplicas:
+    """ReplicaGroup-shaped adapter over the sparse-file-style ChainedStore
+    (the upstream storage scheme behind the modern frontend/comm layers —
+    benchmark ladder column '+comm, chained storage')."""
+
+    def __init__(self, cfg: "EngineConfig"):
+        self.cfg = cfg
+        self.stores = [ChainedStore(cfg.payload_shape)
+                       for _ in range(cfg.n_replicas)]
+        self._rr = 0
+
+    def create_volume(self) -> int:
+        return [s.create_volume() for s in self.stores][0]
+
+    def snapshot(self, vol: int) -> None:
+        for s in self.stores:
+            s.snapshot(vol)
+
+    def write(self, vol, pages, offs, payload, mask=None) -> None:
+        import numpy as _np
+        vols = _np.broadcast_to(_np.asarray(vol), (len(pages),))
+        for s in self.stores:
+            for i in range(len(pages)):
+                if mask is not None and not bool(mask[i]):
+                    continue
+                s.write(int(vols[i]), int(pages[i]), int(offs[i]), payload[i])
+
+    def read(self, vol, pages, offs):
+        import numpy as _np
+        s = self.stores[self._rr % len(self.stores)]
+        self._rr += 1
+        vols = _np.broadcast_to(_np.asarray(vol), (len(pages),))
+        if self.cfg.null_storage:
+            return None
+        return [s.read(int(vols[i]), int(pages[i]), int(offs[i]))
+                for i in range(len(pages))]
+
+
+# ---------------------------------------------------------------------------
+# upstream baseline
+# ---------------------------------------------------------------------------
+class ChainedStore:
+    """Sparse-file-style backing store: per-snapshot page maps; reads walk
+    the snapshot chain newest->oldest (paper: 'Reads in volumes with many
+    snapshots may have to go through the whole chain')."""
+
+    def __init__(self, payload_shape=(64,)):
+        self.chains: Dict[int, List[Dict[int, jnp.ndarray]]] = {}
+        self.payload_shape = tuple(payload_shape)
+        self._next = 0
+        self.layers_walked = 0      # instrumentation: chain-walk depth
+        self.reads = 0
+
+    def create_volume(self) -> int:
+        vid = self._next
+        self._next += 1
+        self.chains[vid] = [{}]
+        return vid
+
+    def snapshot(self, vol: int) -> None:
+        self.chains[vol].append({})     # new live layer
+
+    def write(self, vol: int, page: int, block: int, payload) -> None:
+        live = self.chains[vol][-1]
+        key = (page, block)
+        live[key] = payload             # delegated allocation (dict = fs)
+
+    def read(self, vol: int, page: int, block: int):
+        self.reads += 1
+        for layer in reversed(self.chains[vol]):   # walk the chain
+            self.layers_walked += 1
+            if (page, block) in layer:
+                return layer[(page, block)]
+        return None
+
+
+class UpstreamEngine:
+    """TGT-style frontend + loop-function dispatch + chained sparse store."""
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.frontend = UpstreamFrontend(max_inflight=cfg.n_slots)
+        self.stores = (None if cfg.null_backend else
+                       [ChainedStore(cfg.payload_shape)
+                        for _ in range(cfg.n_replicas)])
+        self._rr = 0
+        self.completed = 0
+
+    def create_volume(self) -> int:
+        if self.stores is None:
+            return 0
+        return [s.create_volume() for s in self.stores][0]
+
+    def snapshot(self, vol: int) -> None:
+        if self.stores is not None:
+            for s in self.stores:
+                s.snapshot(vol)
+
+    def submit(self, req: Request) -> None:
+        self.frontend.submit(req)
+
+    def pump(self) -> int:
+        got = self.frontend.poll_one()      # ONE request per loop iteration
+        if got is None:
+            return 0
+        mid, req = got
+        if self.stores is not None and not self.cfg.null_storage:
+            if req.kind == "write":
+                for s in self.stores:       # mirrored, sequential
+                    s.write(req.volume, req.page, req.block, req.payload)
+            else:
+                s = self.stores[self._rr % len(self.stores)]
+                self._rr += 1
+                s.read(req.volume, req.page, req.block)
+        self.frontend.complete(mid)
+        self.completed += 1
+        return 1
+
+    def drain(self, max_iters: int = 1_000_000) -> int:
+        n = 0
+        for _ in range(max_iters):
+            got = self.pump()
+            if got == 0 and len(self.frontend) == 0:
+                break
+            n += got
+        return n

@@ -1,0 +1,165 @@
+"""Controller<->replica layer: mirroring writes, round-robin reads, rebuild.
+
+Paper §III: "Each write is replicated to all replicas, and each read is
+served by one replica in round robin fashion"; the controller detects a
+faulty replica and rebuilds it from the most up-to-date copy, using the
+per-replica metadata "version" to establish consistency.
+
+Two planes:
+
+- **host-orchestrated replicas** (`ReplicaGroup`): R replica instances, each
+  a (DBSState, payload pool) pair — possibly living on different jax devices
+  or processes. Used by the serving engine and the ladder benchmarks; this is
+  the literal structure of the Longhorn engine.
+- **mesh collectives** (`mirror_write` / `rr_select`): the same write-to-all /
+  read-one pattern expressed inside shard_map for the multi-pod data plane
+  (gradient mirroring across "pod", page stripes across "model").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbs
+
+# jitted data-plane ops (fixed shapes -> compiled once per batch geometry)
+_write_jit = jax.jit(dbs.write_pages)
+_apply_jit = jax.jit(dbs.apply_write_ops)
+
+
+@jax.jit
+def _read_jit(state, pool, vol, pages, block_offsets):
+    ext = dbs.read_resolve(state, vol, pages)
+    return pool[jnp.maximum(ext, 0), block_offsets]
+
+
+# ---------------------------------------------------------------------------
+# host-orchestrated replica group
+# ---------------------------------------------------------------------------
+@dataclass
+class Replica:
+    state: dbs.DBSState
+    pool: jnp.ndarray            # (E, page_blocks, *payload)
+    healthy: bool = True
+
+
+class ReplicaGroup:
+    """The controller's backend: mirrors control+data ops across replicas."""
+
+    def __init__(self, n_replicas: int, n_extents: int, max_volumes: int,
+                 max_pages: int, page_blocks: int, payload_shape=(4,),
+                 dtype=jnp.float32, null_storage: bool = False):
+        self.null_storage = null_storage
+        self.page_blocks = page_blocks
+        self.replicas: List[Replica] = [
+            Replica(state=dbs.make_state(n_extents, max_volumes, max_pages),
+                    pool=jnp.zeros((n_extents, page_blocks) + tuple(payload_shape),
+                                   dtype))
+            for _ in range(n_replicas)]
+        self._rr = 0
+
+    # -- control plane: mirrored to every replica ---------------------------
+    def _all(self, fn: Callable[[dbs.DBSState], Tuple[dbs.DBSState, Any]]):
+        outs = []
+        for r in self.replicas:
+            if not r.healthy:
+                outs.append(None)
+                continue
+            r.state, out = fn(r.state)
+            outs.append(out)
+        first = next(o for o in outs if o is not None)
+        return first
+
+    def create_volume(self) -> int:
+        return int(self._all(dbs.create_volume))
+
+    def snapshot(self, vol: int) -> int:
+        return int(self._all(lambda s: dbs.snapshot(s, jnp.int32(vol))))
+
+    def clone(self, vol: int) -> int:
+        return int(self._all(lambda s: dbs.clone(s, jnp.int32(vol))))
+
+    def delete_volume(self, vol: int) -> None:
+        self._all(lambda s: (dbs.delete_volume(s, jnp.int32(vol)), None))
+
+    # -- data plane ----------------------------------------------------------
+    def write(self, vol, pages: jnp.ndarray, block_offsets: jnp.ndarray,
+              payload: jnp.ndarray, mask=None) -> None:
+        """Mirror a batch of block writes to every healthy replica. The write
+        completes only when all replicas acked (paper: every write creates
+        multiple messages that all must execute before completion)."""
+        bits = (jnp.uint32(1) << block_offsets.astype(jnp.uint32))
+        vol = jnp.asarray(vol, jnp.int32)
+        if mask is None:
+            mask = jnp.ones(pages.shape, bool)
+        for r in self.replicas:
+            if not r.healthy:
+                continue
+            r.state, ops = _write_jit(r.state, vol, pages, bits, mask)
+            if not self.null_storage:
+                r.pool = _apply_jit(r.pool, ops, payload, block_offsets)
+
+    def read(self, vol, pages: jnp.ndarray, block_offsets: jnp.ndarray
+             ) -> jnp.ndarray:
+        """Round-robin read from one healthy replica. vol: scalar or (B,)."""
+        order = [(self._rr + i) % len(self.replicas)
+                 for i in range(len(self.replicas))]
+        self._rr += 1
+        for i in order:
+            r = self.replicas[i]
+            if r.healthy:
+                if self.null_storage:
+                    ext = dbs.read_resolve(
+                        r.state, jnp.asarray(vol, jnp.int32), pages)
+                    return jnp.zeros((pages.shape[0],) + r.pool.shape[2:],
+                                     r.pool.dtype)
+                return _read_jit(r.state, r.pool,
+                                 jnp.asarray(vol, jnp.int32), pages,
+                                 block_offsets)
+        raise RuntimeError("no healthy replica")
+
+    # -- fault handling ------------------------------------------------------
+    def fail(self, idx: int) -> None:
+        self.replicas[idx].healthy = False
+
+    def consistent(self) -> bool:
+        revs = {int(jax.device_get(r.state.revision))
+                for r in self.replicas if r.healthy}
+        return len(revs) == 1
+
+    def rebuild(self, idx: int) -> None:
+        """Restore a failed replica from the most up-to-date healthy copy
+        (highest revision), then mark it healthy. Streams the full extent
+        pool + metadata — the engine-level rebuild of paper §III."""
+        donor = max((r for r in self.replicas if r.healthy),
+                    key=lambda r: int(jax.device_get(r.state.revision)))
+        tgt = self.replicas[idx]
+        tgt.state = jax.tree.map(jnp.copy, donor.state)
+        tgt.pool = jnp.copy(donor.pool)
+        tgt.healthy = True
+
+
+# ---------------------------------------------------------------------------
+# mesh-collective forms (used inside shard_map)
+# ---------------------------------------------------------------------------
+def mirror_write(x: jnp.ndarray, axis: str, src_index: int = 0) -> jnp.ndarray:
+    """Broadcast a written value from ``src_index`` to all replicas on an
+    axis — write-to-all as a collective."""
+    n = jax.lax.axis_size(axis)
+    perm = [(src_index, j) for j in range(n) if j != src_index]
+    out = jax.lax.ppermute(x, axis, perm)
+    me = jax.lax.axis_index(axis)
+    return jnp.where(me == src_index, x, out)
+
+
+def rr_select(x: jnp.ndarray, axis: str, step: jnp.ndarray) -> jnp.ndarray:
+    """Read-one-of-N: replica (step % N) contributes, others send zeros; a
+    psum delivers the chosen replica's value everywhere."""
+    n = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    chosen = (step % n) == me
+    return jax.lax.psum(jnp.where(chosen, x, jnp.zeros_like(x)), axis)

@@ -1,0 +1,126 @@
+"""The Messages Array + available-ID channel (paper §IV-C), as a JAX pytree.
+
+Longhorn's fix for the single-loop-function bottleneck was to replace the
+dynamic ``Messages Map`` (which serializes all request/response matching
+through one thread) with a *fixed-size array* indexed by *pre-allocated
+integer tokens* handed out through a channel. A thread that owns token ``i``
+may touch slot ``i`` and nothing else — no locks, no coordinator.
+
+That construction is exactly the static-shape discipline jit requires, so the
+device-side translation is direct:
+
+- ``ids``   : a ring buffer holding the free token ids (the Go channel),
+- ``head``  : pop cursor (acquire), ``tail``: push cursor (release),
+- the *Messages Array* itself is whatever fixed-size per-slot state the user
+  indexes with the acquired ids (in-flight request table, extent table, ...).
+
+Acquire/release are vectorized: a batch of k tokens moves with two scatter/
+gather ops, the JAX analogue of "each thread pops its own token".
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SlotRing:
+    ids: jnp.ndarray    # (N,) int32 ring storage of free slot ids
+    head: jnp.ndarray   # () int32, monotonically increasing pop cursor
+    tail: jnp.ndarray   # () int32, monotonically increasing push cursor
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[0]
+
+
+def make_ring(n_slots: int) -> SlotRing:
+    return SlotRing(ids=jnp.arange(n_slots, dtype=jnp.int32),
+                    head=jnp.zeros((), jnp.int32),
+                    tail=jnp.asarray(n_slots, jnp.int32))
+
+
+def num_free(ring: SlotRing) -> jnp.ndarray:
+    return ring.tail - ring.head
+
+
+def acquire(ring: SlotRing, k: int, mask=None):
+    """Pop up to ``k`` ids. ``mask`` (k,) bool marks lanes that actually want
+    a token (compaction via prefix-sum keeps non-acquiring lanes inert).
+
+    Returns (ring', ids (k,) int32 with -1 for lanes that got nothing, ok (k,)).
+    """
+    n = ring.capacity
+    want = jnp.ones((k,), bool) if mask is None else mask
+    pos = jnp.cumsum(want.astype(jnp.int32)) - 1            # lane -> offset
+    avail = num_free(ring)
+    ok = want & (pos < avail)
+    idx = (ring.head + pos) % n
+    ids = jnp.where(ok, ring.ids[idx], -1)
+    taken = jnp.sum(ok.astype(jnp.int32))
+    return dataclasses.replace(ring, head=ring.head + taken), ids, ok
+
+
+def release(ring: SlotRing, ids: jnp.ndarray, mask=None) -> SlotRing:
+    """Push ids back (lanes with mask=False or id<0 are ignored)."""
+    n = ring.capacity
+    ok = ids >= 0
+    if mask is not None:
+        ok = ok & mask
+    pos = jnp.cumsum(ok.astype(jnp.int32)) - 1
+    idx = jnp.where(ok, (ring.tail + pos) % n, n)            # n = dump slot
+    padded = jnp.concatenate([ring.ids, jnp.zeros((1,), jnp.int32)])
+    padded = padded.at[idx].set(jnp.where(ok, ids, 0))
+    pushed = jnp.sum(ok.astype(jnp.int32))
+    return dataclasses.replace(ring, ids=padded[:n], tail=ring.tail + pushed)
+
+
+# ---------------------------------------------------------------------------
+# In-flight request table = the Messages Array proper. Used by the serving
+# scheduler: each live request owns one slot for its whole lifetime.
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclass
+class SlotTable:
+    ring: SlotRing
+    active: jnp.ndarray      # (N,) bool — slot currently owned
+    seq_len: jnp.ndarray     # (N,) int32 — tokens generated so far
+    volume: jnp.ndarray      # (N,) int32 — DBS volume backing this request
+    queue: jnp.ndarray       # (N,) int32 — admission queue the request used
+    arrival: jnp.ndarray     # (N,) int32 — admission step (for fairness)
+
+
+def make_table(n_slots: int) -> SlotTable:
+    z = jnp.zeros((n_slots,), jnp.int32)
+    return SlotTable(ring=make_ring(n_slots), active=jnp.zeros((n_slots,), bool),
+                     seq_len=z, volume=z - 1, queue=z, arrival=z)
+
+
+def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
+          queues: jnp.ndarray, step: jnp.ndarray):
+    """Admit up to len(want) requests. Returns (table', slot_ids, ok)."""
+    ring, ids, ok = acquire(table.ring, want.shape[0], want)
+    safe = jnp.where(ok, ids, 0)
+    upd = lambda a, v: a.at[safe].set(jnp.where(ok, v, a[safe]))
+    return dataclasses.replace(
+        table, ring=ring,
+        active=upd(table.active, True),
+        seq_len=upd(table.seq_len, 0),
+        volume=upd(table.volume, volumes),
+        queue=upd(table.queue, queues),
+        arrival=upd(table.arrival, jnp.broadcast_to(step, ids.shape)),
+    ), ids, ok
+
+
+def retire(table: SlotTable, ids: jnp.ndarray, mask=None) -> SlotTable:
+    ok = ids >= 0
+    if mask is not None:
+        ok = ok & mask
+    safe = jnp.where(ok, ids, 0)
+    active = table.active.at[safe].set(jnp.where(ok, False, table.active[safe]))
+    return dataclasses.replace(table, ring=release(table.ring, ids, mask),
+                               active=active)

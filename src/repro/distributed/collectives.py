@@ -1,0 +1,123 @@
+"""Mesh collectives: distributed paged-DBS decode, hierarchical reductions,
+gradient compression.
+
+``make_sharded_paged_decode`` is the distributed form of the DBS read path:
+a volume's pages are striped round-robin across the "model" axis (and across
+all axes when the batch itself cannot shard), every shard gathers only its
+local extents, computes a split-KV partial and the stripes merge with the
+FlashDecoding log-sum-exp rule — psum/pmax over the stripe axes. This is the
+Longhorn controller's scatter/gather across replicas, as a collective.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+
+
+def make_sharded_paged_decode(mesh: Mesh, batch_shardable: bool,
+                              stripe_slice: bool = True):
+    """Returns fn(q, pool_k, pool_v, block_table, q_pos, **kw) -> (B,1,H,dv).
+
+    Layouts (global): q (B,1,H,hd) batch-sharded (or replicated), pools
+    (E, page, KV, hd) extent-striped over model (and batch axes when the
+    batch is unshardable), block_table (B,P) local extent ids, q_pos (B,1).
+    """
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    stripe = ("model",) if batch_shardable else baxes + ("model",)
+    stride = math.prod(mesh.shape[a] for a in stripe)
+    bspec = P(baxes) if batch_shardable else P()
+
+    def local(q, k_new, v_new, pool_k, pool_v, bt, q_pos, *, window,
+              logit_cap, scale):
+        from repro.models.blocks import paged_write_local
+        rank = jnp.zeros((), jnp.int32)
+        for a in stripe:
+            rank = rank * mesh.shape[a] + jax.lax.axis_index(a)
+        pool_k, pool_v = paged_write_local(pool_k, pool_v, bt, q_pos[:, 0],
+                                           k_new, v_new, stride, rank)
+        o, m, l = attn.paged_decode_attention(
+            q, pool_k, pool_v, bt, q_pos, window=window, logit_cap=logit_cap,
+            scale=scale, page_owner_stride=stride, owner_rank=rank,
+            stripe_slice=stripe_slice)
+        # FlashDecoding merge across the stripe axes
+        m_star = jax.lax.pmax(m, stripe)
+        corr = jnp.exp(m - m_star)
+        l_star = jax.lax.psum(l * corr, stripe)
+        o_star = jax.lax.psum(o * corr[..., None], stripe)
+        out = o_star / jnp.maximum(l_star[..., None], 1e-30)
+        b, kv, g, sq, dv = out.shape
+        out = out.reshape(b, kv * g, sq, dv).swapaxes(1, 2).astype(q.dtype)
+        return out, pool_k, pool_v
+
+    pool_spec = P(baxes + ("model",))   # extent dim striped over all shards
+
+    def fn(q, k_new, v_new, pool_k, pool_v, block_table, q_pos, *, window=0,
+           logit_cap=0.0, scale=None):
+        mapped = shard_map(
+            partial(local, window=window, logit_cap=logit_cap, scale=scale),
+            mesh=mesh,
+            in_specs=(bspec, bspec, bspec, pool_spec, pool_spec, bspec, bspec),
+            out_specs=(bspec, pool_spec, pool_spec),
+            check_vma=False)
+        return mapped(q, k_new, v_new, pool_k, pool_v, block_table, q_pos)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# hierarchical gradient reduction (pod-aware) + int8 compression
+# ---------------------------------------------------------------------------
+def hierarchical_psum(x: jnp.ndarray, inner: str = "data", outer: str = "pod"):
+    """reduce inside the pod first (fast ICI), then across pods (DCI)."""
+    x = jax.lax.psum(x, inner)
+    try:
+        return jax.lax.psum(x, outer)
+    except NameError:
+        return x
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization for cross-pod all-reduce."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_cross_pod_mean(grads, axis: str = "pod",
+                              error_feedback=None):
+    """int8 all-reduce across pods with error feedback (EF-SGD style).
+
+    grads: pytree already reduced inside the pod. Returns (mean_grads, new_ef).
+    """
+    n = jax.lax.axis_size(axis)
+
+    def one(g, ef):
+        g32 = g.astype(jnp.float32) + (0.0 if ef is None else ef)
+        q, s = compress_int8(g32)
+        approx = decompress_int8(q, s)
+        new_ef = g32 - approx
+        total = jax.lax.psum(approx, axis)
+        return (total / n).astype(g.dtype), new_ef
+
+    if error_feedback is None:
+        error_feedback = jax.tree.map(lambda _: None, grads,
+                                      is_leaf=lambda x: x is None)
+    out = jax.tree.map(one, grads, error_feedback)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return mean, ef

@@ -1,0 +1,195 @@
+"""Sharding planner: DP/TP/FSDP/EP/SP assignment with divisibility fallbacks.
+
+The planner maps every parameter / activation / cache leaf to a
+PartitionSpec over the production mesh axes ("pod", "data", "model"). A dim
+is sharded on an axis group only when evenly divisible; otherwise the next
+candidate spec is tried, ending at full replication — this is what lets one
+rule set cover all ten assigned architectures (gemma2's 8 heads, granite's
+49155 vocab, granite-moe's 40 experts, rwkv's 40 heads, ... all fall back
+gracefully; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ExecutionPlan, ShapeSpec
+
+Spec = P
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def fits(mesh: Mesh, shape: Sequence[int], spec: P) -> bool:
+    for dim, entry in zip(shape, tuple(spec)):
+        n = _axis_size(mesh, entry)
+        if n > 1 and (dim % n):
+            return False
+    return True
+
+
+def pick(mesh: Mesh, shape: Sequence[int], candidates: List[P]) -> P:
+    """First candidate whose sharded dims divide evenly; else replicate."""
+    for c in candidates:
+        c_full = P(*(tuple(c) + (None,) * (len(shape) - len(tuple(c)))))
+        if fits(mesh, shape, c_full):
+            return c_full
+    return P(*([None] * len(shape)))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+class Planner:
+    def __init__(self, mesh: Mesh, cfg: ArchConfig, plan: ExecutionPlan):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.plan = plan
+        self.batch = batch_axes(mesh)           # ("pod","data") | ("data",)
+        self.fsdp = "data" if (plan.fsdp and "data" in mesh.shape) else None
+
+    # -- generic leaf rules ---------------------------------------------------
+    def param_spec(self, path: str, shape: Sequence[int]) -> P:
+        """Spec for a parameter leaf. ``path`` is the flattened key path;
+        stacked segment leaves have a leading layer dim (never sharded)."""
+        m, f = "model", self.fsdp
+        mesh = self.mesh
+        lead: Tuple = ()
+        if re.search(r"segments|mtp/block", path):
+            if re.search(r"segments", path):
+                lead, shape = (None,), shape[1:]      # (count, ...) stack
+
+        def done(spec_tail: P) -> P:
+            return pick(mesh, (1,) * len(lead) + tuple(shape),
+                        [P(*(lead + tuple(spec_tail)))])
+
+        def cands(cands_tail: List[Tuple]) -> P:
+            full = [P(*(lead + t)) for t in cands_tail]
+            return pick(mesh, (1,) * len(lead) + tuple(shape), full)
+
+        # ---- embeddings / head ---------------------------------------------
+        if "embed/tokens" in path or "embed/lm_head" in path:
+            if len(shape) == 3:   # codebooks (K, V, D) / (K, D, V)
+                return cands([(None, m, f), (None, f, m), (None, None, m)])
+            return cands([(m, f), (f, m), (None, m)])
+        # ---- norms / scalars / small vectors --------------------------------
+        # (shape has already been stripped of the stacked-layer lead dim)
+        if len(shape) <= 1 or re.search(
+                r"ln|norm|bias|mu|u$|d_skip|dt_bias|a_log|first", path):
+            return cands([tuple([None] * len(shape))])
+        # ---- MoE experts -----------------------------------------------------
+        if re.search(r"mlp/(wi|wg|wo)", path) and len(shape) == 3 and \
+                self.cfg.moe is not None:
+            # (E, D, F) / (E, F, D): expert-parallel if E divides, else TP on F
+            if "wo" in path:
+                return cands([(m, f, None), (None, m, f), (None, m, None)])
+            return cands([(m, f, None), (None, f, m), (None, None, m)])
+        if "router" in path:
+            return cands([(f, None)])
+        # ---- attention projections ------------------------------------------
+        if re.search(r"/(q|k|v|q_b|kv_b|w_r|w_k|w_v|w_g|c_r|c_k|in_proj|w_bc|w_dt1)$", path):
+            return cands([(f, m), (None, m)])             # column parallel
+        if re.search(r"/(o|out_proj|w_o|c_v|w_dt2)$", path):
+            return cands([(m, f), (m, None)])             # row parallel
+        if re.search(r"/(q_a|kv_a)$", path):
+            return cands([(f, m), (None, m)])
+        if re.search(r"/(wi|wg)$", path):
+            return cands([(f, m), (None, m)])
+        if re.search(r"/wo$", path):
+            return cands([(m, f), (m, None)])
+        if re.search(r"conv|lora|proj$", path):
+            return cands([tuple([None] * (len(shape) - len(lead)))])
+        # default: replicate
+        return cands([tuple([None] * (len(shape) - len(lead)))])
+
+    # -- trees ----------------------------------------------------------------
+    def tree_specs(self, tree) -> Any:
+        def leaf(path, x):
+            p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+            return self.param_spec(p, x.shape)
+        return jax.tree_util.tree_map_with_path(leaf, tree)
+
+    def shardings(self, tree) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.tree_specs(tree))
+
+    def opt_specs(self, param_specs, param_shapes, optimizer: str):
+        if optimizer == "adamw":
+            return {"m": param_specs, "v": param_specs, "count": P()}
+        # adafactor: vr drops the last dim, vc the second-to-last
+        def slot(spec, shp):
+            spec_t = tuple(spec)
+            if len(shp.shape) >= 2 and shp.shape[-1] > 1 and shp.shape[-2] > 1:
+                return {"vr": P(*spec_t[:-1]),
+                        "vc": P(*(spec_t[:-2] + spec_t[-1:]))}
+            return {"v": P(*spec_t)}
+        slots = jax.tree.map(slot, param_specs, param_shapes,
+                             is_leaf=lambda x: isinstance(x, P))
+        return {"slots": slots, "count": P()}
+
+    # -- activations / batch ---------------------------------------------------
+    def data_spec(self, shape: Sequence[int]) -> P:
+        """Batch tensors: shard dim0 over ("pod","data") when divisible."""
+        return pick(self.mesh, shape,
+                    [P(self.batch), P(self.batch[-1:]), P()])
+
+    def cache_spec(self, key: str, shape: Sequence[int]) -> P:
+        b = self.batch
+        mesh = self.mesh
+        if "pool" in key:
+            # DBS pool: extents striped over (batch-axes x model) — the
+            # distributed extent map (SP for the KV state).
+            return pick(mesh, shape, [P(b + ("model",)), P("model"), P()])
+        if "block_table" in key:
+            return pick(mesh, shape, [P(b), P()])
+        if key in ("k", "v"):      # dense cache: (B, S, KV, hd) — split-KV SP
+            return pick(mesh, shape,
+                        [P(b, "model"), P(b), P()])
+        if "ring" in key:
+            return pick(mesh, shape, [P(b), P()])
+        if "wkv" in key or "mamba" in key or "shift" in key or "ssm" in key:
+            return pick(mesh, shape, [P(b), P()])
+        return pick(mesh, shape, [P(b), P()])
+
+    def cache_specs(self, cache_tree) -> Any:
+        def leaf(path, x):
+            keys = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+            key = keys[-1] if keys else ""
+            if "mamba" in keys:
+                key = "mamba"
+            return self.cache_spec(key, x.shape)
+        return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# page ownership helpers (distributed DBS stripes)
+# ---------------------------------------------------------------------------
+def pool_stride(mesh: Mesh, batch_shardable: bool) -> int:
+    """Number of shards the extent dim of pools is striped over."""
+    n = mesh.shape["model"]
+    if not batch_shardable:
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                n *= mesh.shape[a]
+    return n

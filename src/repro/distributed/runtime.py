@@ -1,0 +1,39 @@
+"""Ambient distribution context for model code.
+
+Model functions are mesh-agnostic; when a launcher wants to pin the residual
+stream's sharding (killing GSPMD's speculative resharding all-reduces,
+§Perf iteration C2) it installs a NamedSharding here around tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+
+_ACT_SHARDING: ContextVar = ContextVar("activation_sharding", default=None)
+
+
+def get_activation_sharding():
+    return _ACT_SHARDING.get()
+
+
+@contextlib.contextmanager
+def activation_sharding(ns):
+    tok = _ACT_SHARDING.set(ns)
+    try:
+        yield
+    finally:
+        _ACT_SHARDING.reset(tok)
+
+
+def constrain(x):
+    ns = get_activation_sharding()
+    if ns is None:
+        return x
+    spec = tuple(ns.spec) if hasattr(ns, "spec") else ()
+    full = spec + (None,) * (x.ndim - len(spec))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ns.mesh, P(*full[:x.ndim])))

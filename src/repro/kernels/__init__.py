@@ -1,0 +1,1 @@
+from repro.kernels import dbs_copy, flash_attention, paged_attention, rwkv6_scan  # noqa: F401

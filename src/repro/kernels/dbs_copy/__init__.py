@@ -1,0 +1,1 @@
+from repro.kernels.dbs_copy.ops import dbs_copy, dbs_copy_reference  # noqa: F401

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the DBS extent-copy kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dbs_copy.kernel import dbs_copy as _dbs_copy_kernel
+from repro.kernels.dbs_copy.ref import dbs_copy_ref
+
+
+def _use_interpret():
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def dbs_copy(pool, src, dst, mask):
+    """Copy pool[src[i]] -> pool[dst[i]] where mask[i] (CoW data plane).
+
+    pool: (E, page, D); trailing payload dims must be pre-flattened to D.
+    """
+    return _dbs_copy_kernel(pool, src, dst, mask,
+                            interpret=_use_interpret())
+
+
+dbs_copy_reference = dbs_copy_ref

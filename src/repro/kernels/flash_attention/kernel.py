@@ -1,0 +1,115 @@
+"""FlashAttention forward as a Pallas TPU kernel.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the kv dim is the
+minor(sequential) grid dimension, so the online-softmax accumulators live in
+VMEM scratch and persist across kv steps (TPU grids execute sequentially).
+Q/K/V blocks are staged HBM->VMEM by BlockSpec; MXU-aligned block shapes
+(multiples of 128 on the sequence dims, head_dim is the lane dim).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            scale, causal, window, logit_cap, sk, sq, bq, bk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = iq * bq + (sk - sq)       # suffix-aligned absolute positions
+    k_start = ik * bk
+
+    # block-level early-out bounds (still a sequential grid step, but the
+    # masked block skips the MXU work entirely)
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > (qpos - window)
+
+    run = jnp.any(mask) if (causal or window) else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if logit_cap:
+            logits = jnp.tanh(logits / logit_cap) * logit_cap
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_sc[...]                              # (bq, 1)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_sc[...] /
+                       jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                        scale=None, block_q=256, block_k=256,
+                        interpret=True):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    while sq % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    grid = (b, h, sq // bq, sk // bk)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, logit_cap=logit_cap,
+                             sk=sk, sq=sq, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

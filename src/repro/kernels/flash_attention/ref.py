@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (independent of models.attention)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window: int = 0,
+                  logit_cap: float = 0.0, scale=None):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd). Queries at positions
+    Sk-Sq..Sk-1 (suffix alignment). Returns (B,H,Sq,hd) fp32."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, kv, g, sq, d)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if logit_cap:
+        logits = jnp.tanh(logits / logit_cap) * logit_cap
+    sk = k.shape[2]
+    qpos = jnp.arange(sq) + (sk - sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d)

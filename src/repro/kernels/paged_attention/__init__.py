@@ -1,0 +1,2 @@
+from repro.kernels.paged_attention.ops import (paged_attention,  # noqa: F401
+                                               paged_attention_reference)

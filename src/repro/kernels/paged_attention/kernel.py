@@ -1,0 +1,115 @@
+"""Paged decode attention as a Pallas TPU kernel — the DBS read path.
+
+The block table (the volume's in-memory extent map, paper §IV-D) is a
+*scalar-prefetch* operand: BlockSpec index_maps dereference it to stream
+exactly the extents owned by each sequence HBM->VMEM, page by page — the
+TPU analogue of DBS reading 1 MB extents off NVMe with O(1) lookups. The
+online-softmax accumulator persists in VMEM scratch across the sequential
+page grid dimension.
+
+Pages past a sequence's length are skipped with @pl.when (their DMA is
+still issued by the prefetcher — acceptable because the serving engine
+sizes tables to ceil(len/page); fully-empty tails only exist transiently).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
+            *, scale, window, logit_cap, page, kv, g):
+    b = pl.program_id(0)
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    length = len_ref[b]
+    base = ip * page
+    run = base < length
+    if window:  # pages wholly below the sliding window are skipped too
+        run &= (base + page - 1) > (length - 1 - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                     # (H, hd)
+        k = k_ref[0].astype(jnp.float32)                     # (page, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+        h, d = q.shape
+        qg = q.reshape(kv, g, d)
+        logits = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale      # (KV, g, page)
+        if logit_cap:
+            logits = jnp.tanh(logits / logit_cap) * logit_cap
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (kv, g, page), 2)
+        valid = pos < length
+        if window:
+            valid &= pos > (length - 1 - window)
+        logits = jnp.where(valid, logits, NEG_INF)
+        m_prev = m_sc[...]                                   # (KV, g)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, -1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # (KV, g, hd_v)
+        acc_sc[...] = acc_sc[...] * corr[..., None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(ip == pl.num_programs(1) - 1)
+    def _fin():
+        out = acc_sc[...] / jnp.maximum(l_sc[...][..., None], 1e-30)
+        o_ref[0] = out.reshape(kv * g, -1).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, pool_k, pool_v, block_table, lengths, *,
+                        window=0, logit_cap=0.0, scale=None, interpret=True):
+    """q: (B,H,hd); pools: (E,page,KV,hd_{k,v}); block_table: (B,P);
+    lengths: (B,). Returns (B,H,hd_v)."""
+    b, h, d = q.shape
+    e, page, kv, dk = pool_k.shape
+    dv = pool_v.shape[-1]
+    p_max = block_table.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    kern = functools.partial(_kernel, scale=scale, window=window,
+                             logit_cap=logit_cap, page=page, kv=kv, g=g)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,          # block_table, lengths
+            grid=(b, p_max),
+            in_specs=[
+                pl.BlockSpec((1, h, d), lambda b_, p_, tbl, ln: (b_, 0, 0)),
+                pl.BlockSpec((1, page, kv, dk),
+                             lambda b_, p_, tbl, ln: (tbl[b_, p_], 0, 0, 0)),
+                pl.BlockSpec((1, page, kv, dv),
+                             lambda b_, p_, tbl, ln: (tbl[b_, p_], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, dv),
+                                   lambda b_, p_, tbl, ln: (b_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((kv, g), jnp.float32),
+                pltpu.VMEM((kv, g), jnp.float32),
+                pltpu.VMEM((kv, g, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, pool_k, pool_v)

@@ -1,0 +1,27 @@
+"""jit'd wrapper for the paged decode attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_fwd
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _use_interpret():
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "logit_cap", "scale"))
+def paged_attention(q, pool_k, pool_v, block_table, lengths, *, window=0,
+                    logit_cap=0.0, scale=None):
+    """q: (B,H,hd) one decode token per sequence; pools (E,page,KV,hd);
+    block_table (B,P) extent ids; lengths (B,). Returns (B,H,hd_v)."""
+    return paged_attention_fwd(q, pool_k, pool_v, block_table, lengths,
+                               window=window, logit_cap=logit_cap,
+                               scale=scale, interpret=_use_interpret())
+
+
+paged_attention_reference = paged_attention_ref

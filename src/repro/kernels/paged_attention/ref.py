@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for paged decode attention (DBS read through block table)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, pool_k, pool_v, block_table, lengths, *,
+                        window: int = 0, logit_cap: float = 0.0, scale=None):
+    """q: (B,H,hd); pools: (E,page,KV,hd); block_table: (B,P) extent ids;
+    lengths: (B,) tokens in cache (query attends to positions < lengths,
+    i.e. the query position is lengths-1 having just been written).
+    Returns (B,H,hd) fp32."""
+    b, h, d = q.shape
+    e, page, kv, _ = pool_k.shape
+    p_max = block_table.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    k = pool_k[block_table]                         # (B,P,page,KV,hd)
+    v = pool_v[block_table]
+    k = k.reshape(b, p_max * page, kv, -1)
+    v = v.reshape(b, p_max * page, kv, -1)
+    pos = jnp.arange(p_max * page)
+    valid = pos[None, :] < lengths[:, None]         # (B,S)
+    if window and window > 0:
+        valid &= pos[None, :] > (lengths[:, None] - 1 - window)
+
+    qf = q.astype(jnp.float32).reshape(b, kv, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) * scale
+    if logit_cap:
+        logits = jnp.tanh(logits / logit_cap) * logit_cap
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, v.shape[-1])

@@ -1,0 +1,98 @@
+"""RWKV-6 chunked recurrence as a Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) — chunks is the sequential minor dimension; the
+(hd x hd) recurrent state lives in fp32 VMEM scratch across chunk steps.
+Within a chunk the recurrence is evaluated in its quadratic "linear
+attention with decay" form (MXU matmuls over (C, hd) tiles), the same
+schedule as models/ssm.py's XLA path — chunked scan states HBM-resident
+there, VREG/VMEM-resident here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, s_sc, *,
+            chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_sc[...] = jnp.zeros_like(s_sc)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    logw = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # (hd,)
+    s_in = s_sc[...]                             # (hd, hd)
+
+    cum = jnp.cumsum(logw, axis=0)
+    cum_excl = cum - logw
+    r_dec = r * jnp.exp(cum_excl)
+    # inter-chunk
+    y = jax.lax.dot_general(r_dec, s_in, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk (strictly lower triangular)
+    att = jax.lax.dot_general(r_dec, k * jnp.exp(-cum),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (C,C)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(cols < rows, att, 0.0)
+    y = y + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # diagonal bonus
+    y = y + jnp.sum(r * (u[None, :] * k), axis=-1, keepdims=True) * v
+    # state update
+    total = cum[-1]
+    k_dec = k * jnp.exp(total[None, :] - cum)
+    s_new = jnp.exp(total)[:, None] * s_in + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_sc[...] = s_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == pl.num_programs(2) - 1)
+    def _fin():
+        sout_ref[0, 0] = s_new.astype(sout_ref.dtype)
+
+
+def rwkv6_scan_fwd(r, k, v, logw, u, *, chunk=64, interpret=True):
+    """r,k,v,logw: (B,S,H,hd); u: (H,hd). Returns (y, s_final (B,H,hd,hd))."""
+    b, s, h, d = r.shape
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    grid = (b, h, s // c)
+    # layout: (B,H,S,hd) blocks
+    rt, kt, vt, wt = (t.swapaxes(1, 2) for t in (r, k, v, logw))
+
+    kern = functools.partial(_kernel, chunk=c)
+    y, s_f = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, d), lambda b_, h_, ic: (h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    return y.swapaxes(1, 2), s_f

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: RWKV-6 recurrence, step-by-step (no chunking)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    """r,k,v,logw: (B,S,H,hd) fp32; u: (H,hd); s0: (B,H,hd,hd).
+
+    y_t = r_t @ (S_{t-1} + (u*k_t)^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    Returns (y (B,S,H,hd), s_final).
+    """
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                              # (B,H,hd)
+        att = s + (u[None] * kt)[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s = wt[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s_f, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), s_f

@@ -1,0 +1,45 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config, smoke_config
+from repro.models import init_params
+from repro.serving import GenRequest, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--queues", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    if cfg.attention_free:
+        print(f"note: {cfg.name} is attention-free; the paged-DBS path is "
+              "inapplicable (DESIGN.md §Arch-applicability) — serving uses "
+              "its O(1) recurrent state.")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=args.slots, max_len=128,
+                      n_queues=args.queues)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=(8,) if cfg.n_codebooks == 1
+                              else (8, cfg.n_codebooks))
+        eng.submit(GenRequest(req_id=rid, prompt=prompt,
+                              max_new=args.max_new))
+    outs = eng.run(max_steps=args.requests * args.max_new + 20)
+    for rid, toks in sorted(outs.items()):
+        print(f"req {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Cell builders: (arch x shape x mesh) -> step fn + fully-sharded input
+ShapeDtypeStructs. Shared by the dry-run launcher, tests and benchmarks.
+
+No device allocation happens here — everything is eval_shape + NamedSharding
+attached to ShapeDtypeStructs (the "weak-type-correct, shardable stand-in"
+pattern from the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, ExecutionPlan, ShapeSpec,
+                                default_plan)
+from repro.distributed.collectives import make_sharded_paged_decode
+from repro.distributed.planner import Planner, batch_axes, pool_stride
+from repro.models import (decode_step, init_cache, init_params, prefill)
+from repro.training.train_step import make_train_step
+
+
+def _sds(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        shapes_tree, shardings_tree)
+
+
+def _cast_float(shapes_tree, dtype):
+    def f(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, jnp.dtype(dtype))
+        return s
+    return jax.tree.map(f, shapes_tree)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    step: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStructs (sharded)
+    donate: Tuple[int, ...]
+    tokens_per_step: int           # for MODEL_FLOPS accounting
+    kind: str                      # train | prefill | decode
+    plan: ExecutionPlan
+
+
+def token_shape(cfg: ArchConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    return (batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, seq)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               plan: Optional[ExecutionPlan] = None) -> Cell:
+    n_chips = math.prod(mesh.shape.values())
+    n_batch_shards = math.prod(mesh.shape[a] for a in batch_axes(mesh))
+    plan = plan or default_plan(cfg, shape, n_chips,
+                                data_shards=n_batch_shards)
+    if plan.moe_pad_to and cfg.moe is not None:
+        pad = math.ceil(cfg.moe.n_experts / plan.moe_pad_to) * plan.moe_pad_to
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_experts_padded=pad))
+    planner = Planner(mesh, cfg, plan)
+
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    if plan.unstack_params and shape.kind != "train":
+        from repro.models.model import unstack_params
+        params_shapes = jax.eval_shape(
+            lambda p: unstack_params(p, cfg), params_shapes)
+    params_shapes = _cast_float(params_shapes, plan.param_dtype)
+    param_specs = planner.tree_specs(params_shapes)
+    params_sds = _sds(params_shapes, _ns(mesh, param_specs))
+
+    gb, seq = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        from repro.training.optimizer import make_optimizer
+        opt_init, _ = make_optimizer(plan.optimizer)
+        opt_shapes = jax.eval_shape(opt_init, params_shapes)
+        opt_specs = planner.opt_specs(param_specs, params_shapes,
+                                      plan.optimizer)
+        opt_sds = _sds(opt_shapes, _ns(mesh, opt_specs))
+        tshape = token_shape(cfg, gb, seq)
+        bspec = planner.data_spec(tshape)
+        tok = jax.ShapeDtypeStruct(tshape, jnp.int32,
+                                   sharding=NamedSharding(mesh, bspec))
+        batch = {"tokens": tok, "labels": tok}
+        _, step = make_train_step(cfg, plan)
+        return Cell(name=f"{cfg.name}:{shape.name}", step=step,
+                    args=(params_sds, opt_sds, batch), donate=(0, 1),
+                    tokens_per_step=gb * seq, kind="train", plan=plan)
+
+    if shape.kind == "prefill":
+        caches_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, gb, seq, paged=False,
+                               dtype=jnp.dtype(plan.compute_dtype)))
+        cache_specs = planner.cache_specs(caches_shapes)
+        caches_sds = _sds(caches_shapes, _ns(mesh, cache_specs))
+        tshape = token_shape(cfg, gb, seq)
+        tok = jax.ShapeDtypeStruct(
+            tshape, jnp.int32,
+            sharding=NamedSharding(mesh, planner.data_spec(tshape)))
+
+        def step(params, tokens, caches):
+            return prefill(params, tokens, cfg, plan, caches)
+
+        return Cell(name=f"{cfg.name}:{shape.name}", step=step,
+                    args=(params_sds, tok, caches_sds), donate=(2,),
+                    tokens_per_step=gb * seq, kind="prefill", plan=plan)
+
+    # ---- decode ------------------------------------------------------------
+    baxes = batch_axes(mesh)
+    bsize = math.prod(mesh.shape[a] for a in baxes)
+    batch_shardable = gb % bsize == 0 and gb >= bsize
+    stride = pool_stride(mesh, batch_shardable)
+    caches_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, gb, seq, paged=True,
+                           dtype=jnp.dtype(plan.compute_dtype),
+                           page_owner_stride=stride))
+    cache_specs = planner.cache_specs(caches_shapes)
+    caches_sds = _sds(caches_shapes, _ns(mesh, cache_specs))
+    bspec = NamedSharding(mesh, P(baxes) if batch_shardable else P())
+    tshape = (gb, cfg.n_codebooks) if cfg.n_codebooks > 1 else (gb,)
+    tok = jax.ShapeDtypeStruct(tshape, jnp.int32, sharding=bspec)
+    pos = jax.ShapeDtypeStruct((gb,), jnp.int32, sharding=bspec)
+    paged_fn = make_sharded_paged_decode(
+        mesh, batch_shardable, stripe_slice=plan.paged_stripe_slice)
+
+    def step(params, tokens, positions, caches):
+        return decode_step(params, tokens, positions, cfg, plan, caches,
+                           paged_decode_fn=paged_fn)
+
+    return Cell(name=f"{cfg.name}:{shape.name}", step=step,
+                args=(params_sds, tok, pos, caches_sds), donate=(3,),
+                tokens_per_step=gb, kind="decode", plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# memory accounting (analytic, backend-independent)
+# ---------------------------------------------------------------------------
+def per_device_bytes(mesh: Mesh, sds_tree) -> float:
+    n_dev = math.prod(mesh.shape.values())
+
+    def one(s):
+        if not hasattr(s, "sharding") or s.sharding is None:
+            return s.size * s.dtype.itemsize
+        spec = s.sharding.spec
+        shards = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        return s.size * s.dtype.itemsize / shards
+
+    return sum(one(s) for s in jax.tree.leaves(sds_tree))

@@ -1,0 +1,4 @@
+from repro.models.model import (decode_step, default_block_tables, forward,
+                                init_cache, init_params, mtp_hidden,
+                                param_count_actual, prefill,
+                                with_block_tables)  # noqa: F401

@@ -1,0 +1,289 @@
+"""Attention implementations (XLA paths).
+
+Three execution tiers, selected by the ExecutionPlan / call site:
+
+- ``dense_attention``     : materializes (Sq, Skv) scores — oracle & tiny smokes.
+- ``chunked_attention``   : FlashAttention algorithm in pure XLA — ``lax.scan``
+                            over KV chunks with an online-softmax carry; O(S)
+                            memory under grad via ``jax.checkpoint`` per chunk.
+- ``banded_attention``    : sliding-window layers — scan over Q chunks, each
+                            attending to a static (window + chunk) KV band
+                            (HBM traffic O(S·W) instead of O(S²)).
+
+Decode-side cores (single new token against a cache) live here too, including
+the split-KV partial/merge pair used by the shard_map paged-DBS decode path
+(pages striped over the "model" axis, FlashDecoding-style log-sum-exp merge —
+see DESIGN.md §4).
+
+The Pallas TPU kernels in ``repro.kernels`` implement the same contracts and
+are validated against ``dense_attention`` oracles.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope  # noqa: F401 (re-export)
+from repro.models.layers import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B,S,H,hd) -> (B,S,KV,G,hd) grouping query heads per KV head."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Causal (+ optional sliding window) mask: (B, Sq, Sk) booleans."""
+    m = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window and window > 0:
+        m &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# dense (oracle)
+# ---------------------------------------------------------------------------
+def dense_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                    logit_cap: float = 0.0, scale: Optional[float] = None):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd); *_pos: (B,S*) absolute positions."""
+    b, sq, h, d = q.shape
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _gqa_expand(q, n_kv)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = _softcap(logits, logit_cap)
+    mask = _mask(q_pos, k_pos, window)[:, None, None]          # (B,1,1,Sq,Sk)
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash (global layers, train/prefill)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                      logit_cap: float = 0.0, scale: Optional[float] = None,
+                      chunk: int = 1024, remat_chunks: bool = True,
+                      unroll: bool = False):
+    b, sq, h, d = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if sk % chunk:
+        chunk = math.gcd(sk, chunk) or sk
+    n_chunks = sk // chunk
+    qg = _gqa_expand(q, n_kv).astype(jnp.float32)              # (B,KV,G,...) below
+    qg = jnp.moveaxis(qg, 1, 3)                                # (B,KV,G,Sq,d)
+
+    k_c = k.reshape(b, n_chunks, chunk, n_kv, k.shape[-1])
+    v_c = v.reshape(b, n_chunks, chunk, n_kv, v.shape[-1])
+    kp_c = k_pos.reshape(b, n_chunks, chunk)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kc, vc, kp = xs                                        # (B,chunk,KV,d)
+        logits = jnp.einsum("bkgqd,bskd->bkgqs", qg, kc.astype(jnp.float32)) * scale
+        logits = _softcap(logits, logit_cap)
+        mask = _mask(q_pos, kp, window)[:, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    if remat_chunks:
+        body = jax.checkpoint(body)
+    g = h // n_kv
+    dv = v.shape[-1]
+    init = (jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, n_kv, g, sq), jnp.float32),
+            jnp.zeros((b, n_kv, g, sq, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(k_c, 1, 0), jnp.moveaxis(v_c, 1, 0), jnp.moveaxis(kp_c, 1, 0)),
+        unroll=unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# banded sliding-window (local layers, train/prefill)
+# ---------------------------------------------------------------------------
+def banded_attention(q, k, v, q_pos, k_pos, *, window: int,
+                     logit_cap: float = 0.0, scale: Optional[float] = None,
+                     q_chunk: int = 1024, remat_chunks: bool = True,
+                     unroll: bool = False):
+    """Sliding-window attention reading only a (window + q_chunk) KV band per
+    query chunk: HBM traffic O(S·W), the XLA analogue of a banded kernel."""
+    b, sq, h, d = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if sq % q_chunk:
+        q_chunk = math.gcd(sq, q_chunk) or sq
+    band = window + q_chunk
+    if band >= sk:  # band covers everything: fall back
+        return chunked_attention(q, k, v, q_pos, k_pos, window=window,
+                                 logit_cap=logit_cap, scale=scale,
+                                 remat_chunks=remat_chunks, unroll=unroll)
+    n_q = sq // q_chunk
+    qg = jnp.moveaxis(_gqa_expand(q, n_kv).astype(jnp.float32), 1, 3)  # B,KV,G,Sq,d
+    qg = qg.reshape(b, n_kv, h // n_kv, n_q, q_chunk, d)
+
+    def body(carry, qi):
+        del carry
+        start = jnp.clip(qi * q_chunk + q_chunk - band, 0, sk - band)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, start, band, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * q_chunk, q_chunk, axis=1)
+        qb = qg[:, :, :, qi]                                   # (B,KV,G,qc,d)
+        logits = jnp.einsum("bkgqd,bskd->bkgqs", qb, ks.astype(jnp.float32)) * scale
+        logits = _softcap(logits, logit_cap)
+        mask = _mask(qp, kp, window)[:, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        ob = jnp.einsum("bkgqs,bskd->bkgqd", w, vs.astype(jnp.float32))
+        return None, ob
+
+    if remat_chunks:
+        body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_q),
+                           unroll=unroll)                      # (n_q,B,KV,G,qc,dv)
+    dv = v.shape[-1]
+    out = jnp.moveaxis(outs, 0, 3)                             # B,KV,G,n_q,qc,dv
+    out = out.reshape(b, n_kv, h // n_kv, sq, dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode cores
+# ---------------------------------------------------------------------------
+def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *, window: int = 0,
+                     logit_cap: float = 0.0, scale: Optional[float] = None):
+    """Single-step decode against a dense cache.
+
+    q: (B,1,H,hd); caches: (B,S,KV,hd); q_pos: (B,1); k_pos: (B,S) with
+    out-of-range slots marked by k_pos > q_pos (they mask off naturally).
+    """
+    o, m, l = decode_partial(q, k_cache, v_cache, q_pos, k_pos,
+                             window=window, logit_cap=logit_cap, scale=scale)
+    return finish_partial(o, m, l).astype(q.dtype)
+
+
+def decode_partial(q, k_cache, v_cache, q_pos, k_pos, *, window: int = 0,
+                   logit_cap: float = 0.0, scale: Optional[float] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Split-KV partial attention: returns unnormalized (o, m, l).
+
+    This is the per-shard piece of the distributed paged-DBS read: each
+    "model" shard holds a stripe of the volume's pages, computes its partial
+    and the stripes merge with :func:`merge_partials` (psum form in
+    ``repro.distributed.collectives``).
+    """
+    b, sq, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    # native-dtype matmuls with fp32 accumulation (MXU bf16xbf16->f32): no
+    # fp32 materialization of the gathered KV (§Perf iteration A3)
+    qg = _gqa_expand(q, n_kv).astype(k_cache.dtype)            # (B,1,KV,G,d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, logit_cap)
+    mask = _mask(q_pos, k_pos, window)[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                               # (B,KV,G,1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask, p, 0.0)                                # kill all-masked row exp(0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def merge_partials(o_parts, m_parts, l_parts):
+    """Merge split-KV partials (stacked on axis 0) -> normalized output."""
+    m_star = jnp.max(m_parts, axis=0)
+    corr = jnp.exp(m_parts - m_star)
+    l_star = jnp.sum(l_parts * corr, axis=0)
+    o_star = jnp.sum(o_parts * corr[..., None], axis=0)
+    return o_star / jnp.maximum(l_star[..., None], 1e-30)
+
+
+def finish_partial(o, m, l):
+    """(B,KV,G,1,d) unnormalized -> (B,1,H,d) normalized output."""
+    b, kv, g, sq, d = o.shape
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, kv * g, sq, d).swapaxes(1, 2)
+
+
+# ---------------------------------------------------------------------------
+# paged decode (XLA gather path — the DBS read through the block table)
+# ---------------------------------------------------------------------------
+def paged_gather(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """pool: (E, page, ...); block_table: (B, P) int32 -> (B, P*page, ...).
+
+    The gather *is* DBS's in-memory extent map lookup: O(1) per page and
+    independent of snapshot-chain length (the paper's key DBS property)."""
+    g = pool[block_table]                                      # (B,P,page,...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_decode_attention(q, pool_k, pool_v, block_table, q_pos, *,
+                           window: int = 0, logit_cap: float = 0.0,
+                           scale: Optional[float] = None,
+                           page_owner_stride: int = 1, owner_rank: int = 0,
+                           stripe_slice: bool = True):
+    """Decode attention reading KV through DBS block tables.
+
+    pool_k/pool_v: (E, page, KV, hd); block_table: (B, P_max) local extent ids
+    (entries for pages this shard does not own are ignored via masking);
+    page ``p`` of a sequence is owned by shard ``p % page_owner_stride``.
+    Returns unnormalized partials (o, m, l) ready for the model-axis merge;
+    single-shard callers normalize via :func:`finish_partial`.
+
+    ``stripe_slice`` (§Perf iteration A2): gather only the P/stride pages this
+    shard owns instead of gathering everything and masking — a stride-fold
+    reduction in gather traffic. Falls back to gather+mask when P does not
+    divide by the stride.
+    """
+    b, p_max = block_table.shape
+    page = pool_k.shape[1]
+    stride = page_owner_stride
+    if stripe_slice and stride > 1 and p_max % stride == 0:
+        # page p (global) = local column l*stride + rank
+        bt = block_table.reshape(b, p_max // stride, stride)
+        bt = jnp.take(bt, owner_rank, axis=2)                  # (B, P/stride)
+        k = paged_gather(pool_k, bt)                           # owned pages only
+        v = paged_gather(pool_v, bt)
+        l_idx = jnp.arange(p_max // stride, dtype=jnp.int32)
+        pos = ((l_idx * stride + owner_rank)[:, None] * page
+               + jnp.arange(page, dtype=jnp.int32)[None, :])
+        k_pos = jnp.broadcast_to(pos.reshape(-1), k.shape[:2])
+        return decode_partial(q, k, v, q_pos, k_pos, window=window,
+                              logit_cap=logit_cap, scale=scale)
+    k = paged_gather(pool_k, block_table)                      # (B, P*page, KV, hd)
+    v = paged_gather(pool_v, block_table)
+    # absolute positions of gathered slots
+    page_idx = jnp.arange(p_max, dtype=jnp.int32)
+    owner_ok = (page_idx % page_owner_stride) == owner_rank    # (P,)
+    pos = (page_idx[:, None] * page + jnp.arange(page, dtype=jnp.int32)[None, :])
+    k_pos = jnp.broadcast_to(pos.reshape(-1), (b, p_max * page))
+    # non-owned pages pushed out of causal range
+    k_pos = jnp.where(jnp.repeat(owner_ok, page)[None, :], k_pos,
+                      jnp.iinfo(jnp.int32).max)
+    return decode_partial(q, k, v, q_pos, k_pos, window=window,
+                          logit_cap=logit_cap, scale=scale)

@@ -1,0 +1,453 @@
+"""Transformer/SSM blocks, the layer schedule and KV-cache structures.
+
+A model is a sequence of *segments*; each segment is ``count`` repetitions of
+a static tuple of layer signatures. Segments with ``count > 1`` execute as a
+``lax.scan`` over stacked parameters (train/prefill), while decode unrolls
+layers and threads heterogeneous per-layer caches (paged DBS pools for global
+attention, ring buffers for sliding-window layers, O(1) recurrent states for
+Mamba/RWKV).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, ATTN_GLOBAL, ATTN_HYBRID,
+                                ATTN_LOCAL, ATTN_MLA, ATTN_RWKV, MLP_DENSE,
+                                MLP_MOE)
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (Params, _split, apply_mlp, apply_moe,
+                                 dense_init, init_mlp, init_moe, rms_norm)
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# layer schedule
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerSig:
+    attn: str          # global | local | mla | hybrid | rwkv6
+    window: int        # 0 = full attention
+    mlp: str           # dense | moe
+
+
+@dataclass(frozen=True)
+class Segment:
+    sigs: Tuple[LayerSig, ...]
+    count: int
+    first_layer: int   # global index of the segment's first layer
+
+
+def layer_sigs(cfg: ArchConfig) -> List[LayerSig]:
+    out = []
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        window = 0
+        if kind == ATTN_LOCAL:
+            window = cfg.sliding_window
+        elif kind == ATTN_HYBRID:
+            window = 0 if i in cfg.global_layer_indices else cfg.sliding_window
+        out.append(LayerSig(kind, window, cfg.mlp_kind(i)))
+    return out
+
+
+def layer_schedule(cfg: ArchConfig) -> List[Segment]:
+    sigs = layer_sigs(cfg)
+    n = len(sigs)
+    # try a small repeating unit (gemma2: LG, gemma3: LLLLLG)
+    for u in range(1, 9):
+        reps, tail = divmod(n, u)
+        if reps < 2:
+            break
+        unit = tuple(sigs[:u])
+        if tuple(sigs) == (unit * (reps + 1))[:n]:
+            segs = [Segment(unit, reps, 0)]
+            if tail:
+                segs.append(Segment(tuple(sigs[reps * u:]), 1, reps * u))
+            return segs
+    # fallback: run-length segments (hymba, deepseek)
+    segs: List[Segment] = []
+    i = 0
+    while i < n:
+        j = i
+        while j < n and sigs[j] == sigs[i]:
+            j += 1
+        segs.append(Segment((sigs[i],), j - i, i))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameter init
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg: ArchConfig, sig: LayerSig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = _split(key, 12)
+    p: Params = {"ln1": jnp.zeros((d,)) if _gemma(cfg) else jnp.ones((d,)),
+                 "ln2": jnp.zeros((d,)) if _gemma(cfg) else jnp.ones((d,))}
+    if sig.attn == ATTN_RWKV:
+        p["tmix_cmix"] = ssm.init_rwkv6(ks[0], cfg)
+        return p
+    if sig.attn == ATTN_MLA:
+        m = cfg.mla
+        qh = cfg.n_heads * (m.nope_head_dim + m.rope_head_dim)
+        p.update({
+            "q_a": dense_init(ks[0], d, m.q_lora_rank),
+            "q_a_norm": jnp.ones((m.q_lora_rank,)),
+            "q_b": dense_init(ks[1], m.q_lora_rank, qh),
+            "kv_a": dense_init(ks[2], d, m.kv_lora_rank + m.rope_head_dim),
+            "kv_a_norm": jnp.ones((m.kv_lora_rank,)),
+            "kv_b": dense_init(ks[3], m.kv_lora_rank,
+                               cfg.n_heads * (m.nope_head_dim + m.v_head_dim)),
+            "o": dense_init(ks[4], cfg.n_heads * m.v_head_dim, d),
+        })
+    else:
+        p.update({
+            "q": dense_init(ks[0], d, cfg.n_heads * hd),
+            "k": dense_init(ks[1], d, cfg.n_kv_heads * hd),
+            "v": dense_init(ks[2], d, cfg.n_kv_heads * hd),
+            "o": dense_init(ks[3], cfg.n_heads * hd, d),
+        })
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((hd,))
+            p["k_norm"] = jnp.ones((hd,))
+        if sig.attn == ATTN_HYBRID:
+            p["mamba"] = ssm.init_mamba(ks[5], cfg)
+            p["fuse_norm_attn"] = jnp.ones((d,))
+            p["fuse_norm_ssm"] = jnp.ones((d,))
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.zeros((d,)) if _gemma(cfg) else jnp.ones((d,))
+        p["ln2_post"] = jnp.zeros((d,)) if _gemma(cfg) else jnp.ones((d,))
+    p["mlp"] = init_moe(ks[6], cfg) if sig.mlp == MLP_MOE else init_mlp(ks[6], cfg)
+    return p
+
+
+def _gemma(cfg: ArchConfig) -> bool:
+    return cfg.name.startswith("gemma")
+
+
+def _norm(cfg):
+    def f(x, w):
+        return rms_norm(x, w, cfg.norm_eps, gemma_style=_gemma(cfg))
+    return f
+
+
+# ---------------------------------------------------------------------------
+# cache structures
+# ---------------------------------------------------------------------------
+def init_layer_cache(cfg: ArchConfig, sig: LayerSig, batch: int, max_len: int,
+                     *, paged: bool, dtype=jnp.bfloat16,
+                     page_owner_stride: int = 1) -> Params:
+    """Cache pytree for one layer; shapes only — dryrun uses eval_shape."""
+    hd = cfg.resolved_head_dim
+    page = cfg.page_blocks
+    if sig.attn == ATTN_RWKV:
+        st = ssm.rwkv6_init_state(cfg, batch, dtype)
+        return {"rwkv": st}
+    c: Params = {}
+    if sig.attn == ATTN_HYBRID:
+        e = cfg.ssm.expand * cfg.d_model
+        c["mamba"] = (jnp.zeros((batch, cfg.ssm.conv_kernel - 1, e), dtype),
+                      jnp.zeros((batch, e, cfg.ssm.state_dim), jnp.float32))
+    if sig.attn == ATTN_MLA:
+        m = cfg.mla
+        kd, vd = m.kv_lora_rank + m.rope_head_dim, m.kv_lora_rank
+        n_kv = 1
+    else:
+        kd = vd = hd
+        n_kv = cfg.n_kv_heads
+    if sig.window:  # sliding-window ring buffer
+        w = min(sig.window, max_len)
+        c["ring_k"] = jnp.zeros((batch, w, n_kv, kd), dtype)
+        c["ring_v"] = jnp.zeros((batch, w, n_kv, vd), dtype)
+        c["ring_pos"] = jnp.full((batch, w), INT32_MAX, jnp.int32)
+    elif paged:
+        stride = max(page_owner_stride, 1)
+        n_pages = math.ceil(max_len / page)
+        padded = math.ceil(n_pages / stride) * stride
+        # global pool: one extent per (sequence, padded page); stripe r of the
+        # extent dim holds pages p with p % stride == r.
+        n_ext = max(stride, batch * padded)
+        c["pool_k"] = jnp.zeros((n_ext, page, n_kv, kd), dtype)
+        c["pool_v"] = jnp.zeros((n_ext, page, n_kv, vd), dtype)
+        c["block_table"] = jnp.zeros((batch, n_pages), jnp.int32)
+    else:
+        c["k"] = jnp.zeros((batch, max_len, n_kv, kd), dtype)
+        c["v"] = jnp.zeros((batch, max_len, n_kv, vd), dtype)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+@dataclass
+class BlockCtx:
+    """Everything a block needs besides params and the hidden state."""
+    mode: str                              # train | prefill | decode
+    q_pos: jnp.ndarray                     # (B, Sq) absolute positions
+    k_pos: Optional[jnp.ndarray] = None    # (B, Sk) for train/prefill
+    cache: Optional[Params] = None
+    attn_impl: str = "chunked"             # dense | chunked | pallas
+    chunk: int = 1024
+    ssm_chunk: int = 256
+    unroll: bool = False                   # unroll inner scans (accounting)
+    paged_decode_fn: Optional[Callable] = None  # distributed override
+    page_owner_stride: int = 1
+    owner_rank: int = 0
+
+
+def _project_qkv(cfg, p, h):
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q = (h @ p["q"].astype(h.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ p["k"].astype(h.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ p["v"].astype(h.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, gemma_style=_gemma(cfg))
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, gemma_style=_gemma(cfg))
+    return q, k, v
+
+
+def _project_mla(cfg, p, h, ctx):
+    """Returns (q_eff, k_new, v_new, scale) in the *absorbed* latent basis.
+
+    q_eff: (B,S,H,kv_rank+rope); k_new: (B,S,1,kv_rank+rope); v_new = latent
+    (B,S,1,kv_rank). Works for train/prefill/decode uniformly — attention runs
+    with one shared KV "head" and H query groups (GQA with n_kv=1).
+    """
+    m = cfg.mla
+    b, s, _ = h.shape
+    nope, rope, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    qa = rms_norm(h @ p["q_a"].astype(h.dtype), p["q_a_norm"], cfg.norm_eps)
+    q = (qa @ p["q_b"].astype(h.dtype)).reshape(b, s, cfg.n_heads, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = attn.apply_rope(q_rope, ctx.q_pos, cfg.rope_theta)
+
+    kv = h @ p["kv_a"].astype(h.dtype)                         # (B,S,rank+rope)
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:].reshape(b, s, 1, rope)
+    k_rope = attn.apply_rope(k_rope, ctx.q_pos, cfg.rope_theta)
+
+    # absorb the k-part of kv_b into q:  q_lat = q_nope @ W_k^T (per head)
+    w = p["kv_b"].astype(h.dtype).reshape(m.kv_lora_rank, cfg.n_heads, nope + vd)
+    w_k = w[..., :nope]                                        # (rank, H, nope)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_k)
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)
+    k_new = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)
+    v_new = c_kv[:, :, None, :]
+    scale = 1.0 / math.sqrt(nope + rope)
+    return q_eff, k_new, v_new, scale
+
+
+def _mla_output(cfg, p, o_lat):
+    """o_lat: (B,S,H,kv_rank) -> (B,S,D) via the absorbed v-part of kv_b."""
+    m = cfg.mla
+    w = p["kv_b"].astype(o_lat.dtype).reshape(
+        m.kv_lora_rank, cfg.n_heads, m.nope_head_dim + m.v_head_dim)
+    w_v = w[..., m.nope_head_dim:]                             # (rank, H, vd)
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, w_v)
+    b, s = o.shape[:2]
+    return o.reshape(b, s, cfg.n_heads * m.v_head_dim) @ p["o"].astype(o.dtype)
+
+
+def _full_attention(cfg, sig, q, k, v, ctx, scale=None):
+    """train/prefill attention dispatch (q,k,v already rope'd)."""
+    kwargs = dict(window=sig.window, logit_cap=cfg.attn_logit_softcap,
+                  scale=scale)
+    if ctx.attn_impl == "dense":
+        return attn.dense_attention(q, k, v, ctx.q_pos, ctx.k_pos, **kwargs)
+    if ctx.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, ctx.q_pos, ctx.k_pos, **kwargs)
+    if sig.window and sig.window > 0:
+        return attn.banded_attention(q, k, v, ctx.q_pos, ctx.k_pos,
+                                     window=sig.window,
+                                     logit_cap=cfg.attn_logit_softcap,
+                                     scale=scale, q_chunk=ctx.chunk,
+                                     unroll=ctx.unroll)
+    return attn.chunked_attention(q, k, v, ctx.q_pos, ctx.k_pos,
+                                  chunk=ctx.chunk, unroll=ctx.unroll, **kwargs)
+
+
+def _decode_attention(cfg, sig, p, q, k_new, v_new, ctx, cache, scale=None):
+    """Single-token decode: read cache (+write the new KV), all cache kinds."""
+    b = q.shape[0]
+    pos = ctx.q_pos[:, 0]                                      # (B,)
+    new_cache = dict(cache)
+    cap = cfg.attn_logit_softcap
+    if "ring_k" in cache:
+        w = cache["ring_k"].shape[1]
+        slot = pos % w
+        rk = cache["ring_k"].at[jnp.arange(b), slot].set(k_new[:, 0])
+        rv = cache["ring_v"].at[jnp.arange(b), slot].set(v_new[:, 0])
+        rp = cache["ring_pos"].at[jnp.arange(b), slot].set(pos)
+        new_cache.update(ring_k=rk, ring_v=rv, ring_pos=rp)
+        out = attn.decode_attention(q, rk, rv, ctx.q_pos, rp,
+                                    window=sig.window, logit_cap=cap, scale=scale)
+    elif "pool_k" in cache:
+        # write (into the owner's stripe) + paged read, both inside the
+        # paged fn — distributed callers wrap it in shard_map so extent ids
+        # stay local to their stripe (see distributed/collectives.py).
+        fn = ctx.paged_decode_fn or _local_paged_decode
+        out, pk, pv = fn(q, k_new, v_new, cache["pool_k"], cache["pool_v"],
+                         cache["block_table"], ctx.q_pos,
+                         window=sig.window, logit_cap=cap, scale=scale)
+        new_cache.update(pool_k=pk, pool_v=pv)
+    else:
+        s_max = cache["k"].shape[1]
+        kc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0)
+                      )(cache["k"], k_new, pos)
+        vc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0)
+                      )(cache["v"], v_new, pos)
+        new_cache.update(k=kc, v=vc)
+        k_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32), (b, s_max))
+        out = attn.decode_attention(q, kc, vc, ctx.q_pos, k_pos,
+                                    window=sig.window, logit_cap=cap, scale=scale)
+    return out, new_cache
+
+
+def paged_write_local(pool_k, pool_v, block_table, pos, k_new, v_new,
+                      stride: int = 1, rank=0):
+    """Scatter one new token's K/V into the owner stripe's pool (local ids)."""
+    b = pos.shape[0]
+    page = pool_k.shape[1]
+    page_idx = pos // page
+    ext = block_table[jnp.arange(b), page_idx]
+    off = pos % page
+    owned = (page_idx % stride) == rank
+    ext_w = jnp.where(owned, ext, 0)
+    pk = pool_k.at[ext_w, off].set(
+        jnp.where(owned[:, None, None], k_new[:, 0], pool_k[ext_w, off]))
+    pv = pool_v.at[ext_w, off].set(
+        jnp.where(owned[:, None, None], v_new[:, 0], pool_v[ext_w, off]))
+    return pk, pv
+
+
+def _local_paged_decode(q, k_new, v_new, pool_k, pool_v, block_table, q_pos,
+                        *, window=0, logit_cap=0.0, scale=None):
+    pool_k, pool_v = paged_write_local(pool_k, pool_v, block_table,
+                                       q_pos[:, 0], k_new, v_new)
+    o, m, l = attn.paged_decode_attention(
+        q, pool_k, pool_v, block_table, q_pos, window=window,
+        logit_cap=logit_cap, scale=scale)
+    return attn.finish_partial(o, m, l).astype(q.dtype), pool_k, pool_v
+
+
+def _write_prefill_cache(cfg, sig, cache, k, v, ctx):
+    """Store prefill K/V into the layer cache (ring / paged / dense)."""
+    new_cache = dict(cache)
+    b, s = k.shape[:2]
+    if "ring_k" in cache:
+        w = cache["ring_k"].shape[1]
+        take = min(w, s)
+        # slot = pos % w, the same rule decode uses — ring stays coherent for
+        # any prefill length.
+        slots = ctx.k_pos[:, -take:] % w                       # (B, take)
+        rows = jnp.arange(b)[:, None]
+        new_cache["ring_k"] = cache["ring_k"].at[rows, slots].set(k[:, -take:])
+        new_cache["ring_v"] = cache["ring_v"].at[rows, slots].set(v[:, -take:])
+        new_cache["ring_pos"] = cache["ring_pos"].at[rows, slots].set(
+            ctx.k_pos[:, -take:])
+    elif "pool_k" in cache:
+        page = cache["pool_k"].shape[1]
+        n_pages = s // page
+        ext = cache["block_table"][:, :n_pages]                # (B,P)
+        kp = k.reshape(b, n_pages, page, *k.shape[2:])
+        vp = v.reshape(b, n_pages, page, *v.shape[2:])
+        new_cache["pool_k"] = cache["pool_k"].at[ext].set(kp)
+        new_cache["pool_v"] = cache["pool_v"].at[ext].set(vp)
+    else:
+        new_cache["k"] = cache["k"].at[:, :s].set(k)
+        new_cache["v"] = cache["v"].at[:, :s].set(v)
+    return new_cache
+
+
+def apply_block(cfg: ArchConfig, sig: LayerSig, p: Params, x: jnp.ndarray,
+                ctx: BlockCtx
+                ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """One block. Returns (hidden, new_cache-or-None, aux_loss scalar)."""
+    norm = _norm(cfg)
+    new_cache = ctx.cache
+    aux = jnp.zeros((), jnp.float32)
+
+    # ---------------- token mixer ------------------------------------------
+    if sig.attn == ATTN_RWKV:
+        tp = p["tmix_cmix"]
+        st = (ctx.cache or {}).get("rwkv") if ctx.cache else None
+        if st is None:
+            st = ssm.rwkv6_init_state(cfg, x.shape[0], x.dtype)
+        h = norm(x, p["ln1"])
+        y, st_t = ssm.rwkv6_time_mix(tp, h, st, cfg, chunk=ctx.ssm_chunk,
+                                     unroll=ctx.unroll)
+        x = x + y
+        h2 = norm(x, p["ln2"])
+        y2, st_c = ssm.rwkv6_channel_mix(tp, h2, st)
+        x = x + y2
+        if ctx.cache is not None:
+            new_cache = {"rwkv": {**st, **st_t, **st_c}}
+        return x, new_cache, aux
+
+    resid = x
+    h = norm(x, p["ln1"])
+    scale = None
+    if sig.attn == ATTN_MLA:
+        q_eff, k_new, v_new, scale = _project_mla(cfg, p, h, ctx)
+        q, k, v = q_eff, k_new, v_new
+    else:
+        q, k, v = _project_qkv(cfg, p, h)
+        q = attn.apply_rope(q, ctx.q_pos, cfg.rope_theta)
+        k = attn.apply_rope(k, ctx.q_pos, cfg.rope_theta)
+
+    if ctx.mode == "decode":
+        o, att_cache = _decode_attention(cfg, sig, p, q, k, v, ctx,
+                                         ctx.cache, scale=scale)
+        new_cache = att_cache
+    else:
+        o = _full_attention(cfg, sig, q, k, v, ctx, scale=scale)
+        if ctx.mode == "prefill":
+            new_cache = _write_prefill_cache(cfg, sig, ctx.cache, k, v, ctx)
+
+    if sig.attn == ATTN_MLA:
+        att_out = _mla_output(cfg, p, o)
+    else:
+        b, s = o.shape[:2]
+        att_out = o.reshape(b, s, -1) @ p["o"].astype(o.dtype)
+
+    if sig.attn == ATTN_HYBRID:
+        mstate = (ctx.cache or {}).get("mamba") if ctx.cache else None
+        if ctx.mode == "decode":
+            m_out, m_state = ssm.mamba_step(p["mamba"], h, mstate)
+        else:
+            m_out, m_state = ssm.mamba_forward(p["mamba"], h, mstate,
+                                               chunk=ctx.ssm_chunk,
+                                               unroll=ctx.unroll)
+        att_out = 0.5 * (norm(att_out, p["fuse_norm_attn"])
+                         + norm(m_out, p["fuse_norm_ssm"]))
+        if ctx.cache is not None:
+            new_cache = dict(new_cache or {})
+            new_cache["mamba"] = m_state
+
+    if cfg.post_norms:
+        att_out = norm(att_out, p["ln1_post"])
+    x = resid + att_out
+
+    # ---------------- MLP ---------------------------------------------------
+    resid = x
+    h = norm(x, p["ln2"])
+    if sig.mlp == MLP_MOE:
+        mlp_out, aux = apply_moe(p["mlp"], h, cfg)
+    else:
+        mlp_out = apply_mlp(p["mlp"], h, cfg)
+    if cfg.post_norms:
+        mlp_out = norm(mlp_out, p["ln2_post"])
+    x = resid + mlp_out
+    from repro.distributed.runtime import constrain
+    x = constrain(x)
+    return x, new_cache, aux

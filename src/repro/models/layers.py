@@ -1,0 +1,230 @@
+"""Shared layer primitives: norms, RoPE, MLPs, MoE, embeddings.
+
+Everything is a pure function over explicit parameter pytrees (no flax/haiku
+dependency): ``init_*`` builds params, ``apply`` style functions consume them.
+Compute dtype is controlled by the caller (params are cast at the call site).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             *, gemma_style: bool = False) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    out = x * (1.0 + w) if gemma_style else x * w
+    return out.astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma2-style tanh logit soft-capping; no-op when cap == 0."""
+    if cap and cap > 0.0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu_tanh":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                                 # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = _split(key, 3)
+    p = {"wi": dense_init(ks[0], d, f), "wo": dense_init(ks[1], f, d)}
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], d, f)
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    act = activation_fn(cfg.activation)
+    h = x @ p["wi"].astype(x.dtype)
+    h = act(h) * (x @ p["wg"].astype(x.dtype)) if "wg" in p else act(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE — token-dropless routing via sort + ragged_dot (MegaBlocks-on-TPU style)
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ArchConfig) -> Params:
+    mo = cfg.moe
+    d, f, e = cfg.d_model, mo.d_ff_expert, mo.e_total
+    ks = _split(key, 6)
+    p: Params = {
+        "router": dense_init(ks[0], d, e),
+        "wi": jax.random.normal(ks[1], (e, d, f)) / math.sqrt(d),
+        "wo": jax.random.normal(ks[2], (e, f, d)) / math.sqrt(f),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = jax.random.normal(ks[3], (e, d, f)) / math.sqrt(d)
+    if mo.router_aux_free:
+        p["router_bias"] = jnp.zeros((e,), jnp.float32)
+    if mo.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=mo.n_shared * mo.d_ff_shared)
+    return p
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Dropless top-k MoE.
+
+    Tokens are flattened, replicated top_k times, sorted by expert id and fed
+    through ``jax.lax.ragged_dot`` (grouped GEMM, the TPU analogue of
+    MegaBlocks' block-sparse GEMM). No capacity, no dropping: FLOPs are
+    6*N_active*D, which is what the roofline accounting assumes.
+    """
+    mo = cfg.moe
+    act = activation_fn(cfg.activation)
+    orig_shape = x.shape
+    xf = x.reshape(-1, cfg.d_model)
+    t = xf.shape[0]
+
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)  # (T, E)
+    if mo.n_experts_padded > mo.n_experts:
+        # padded experts exist only for even expert-parallel sharding; the
+        # router never selects them
+        dead = jnp.arange(mo.e_total) >= mo.n_experts
+        logits = jnp.where(dead[None, :], -1e30, logits)
+    if mo.router_aux_free:
+        gates = jax.nn.sigmoid(logits)
+        _, top_idx = jax.lax.top_k(gates + p["router_bias"], mo.top_k)
+        top_gate = jnp.take_along_axis(gates, top_idx, axis=-1)
+        top_w = top_gate / (jnp.sum(top_gate, -1, keepdims=True) + 1e-9)
+    else:
+        top_logits, top_idx = jax.lax.top_k(logits, mo.top_k)
+        top_w = jax.nn.softmax(top_logits, axis=-1)
+
+    flat_ids = top_idx.reshape(-1)                            # (T*k,)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_ids)                             # stable
+    inv_order = jnp.argsort(order)
+    sorted_ids = flat_ids[order]
+    token_of = order // mo.top_k                              # (T*k,)
+    xs = xf[token_of]                                         # (T*k, D) sorted by expert
+    group_sizes = jnp.bincount(sorted_ids, length=mo.e_total)
+
+    h = jax.lax.ragged_dot(xs, p["wi"].astype(xs.dtype), group_sizes)
+    if "wg" in p:
+        g = jax.lax.ragged_dot(xs, p["wg"].astype(xs.dtype), group_sizes)
+        h = act(h) * g
+    else:
+        h = act(h)
+    ys = jax.lax.ragged_dot(h, p["wo"].astype(xs.dtype), group_sizes)  # (T*k, D)
+
+    ys = ys[inv_order] * flat_w[:, None].astype(ys.dtype)
+    out = jnp.sum(ys.reshape(t, mo.top_k, cfg.d_model), axis=1)
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], xf, cfg)
+
+    # Switch-style load-balance aux loss (skipped for aux-free routing).
+    if mo.router_aux_free:
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        probs = jax.nn.softmax(logits, -1)
+        counts = jnp.zeros((mo.e_total,), jnp.float32).at[flat_ids].add(1.0)
+        aux = mo.n_experts * jnp.sum(
+            (counts / jnp.maximum(counts.sum(), 1.0)) * probs.mean(0))
+    return out.reshape(orig_shape), aux
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / output head
+# ---------------------------------------------------------------------------
+def init_embeddings(key, cfg: ArchConfig) -> Params:
+    ks = _split(key, 3)
+    k_cb = cfg.n_codebooks
+    shape = (k_cb, cfg.vocab_size, cfg.d_model) if k_cb > 1 else (cfg.vocab_size, cfg.d_model)
+    p: Params = {"tokens": jax.random.normal(ks[0], shape) * 0.02}
+    if not cfg.tie_embeddings:
+        hshape = (k_cb, cfg.d_model, cfg.vocab_size) if k_cb > 1 else (cfg.d_model, cfg.vocab_size)
+        p["lm_head"] = jax.random.normal(ks[1], hshape) * 0.02
+    return p
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """tokens: (B, S) or (B, S, K) for multi-codebook archs."""
+    emb = p["tokens"].astype(dtype)
+    if cfg.n_codebooks > 1:
+        # sum the K codebook embeddings (musicgen)
+        out = 0.0
+        for k in range(cfg.n_codebooks):
+            out = out + emb[k][tokens[..., k]]
+    else:
+        out = emb[tokens]
+    if cfg.post_norms or cfg.activation == "gelu_tanh":
+        # gemma normalizes embeddings by sqrt(d_model)
+        if cfg.name.startswith("gemma"):
+            out = out * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return out
+
+
+def lm_logits(p: Params, h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """h: (..., D) -> logits (..., V) or (..., K, V)."""
+    if cfg.tie_embeddings:
+        table = p["tokens"].astype(h.dtype)
+        if cfg.n_codebooks > 1:
+            out = jnp.einsum("...d,kvd->...kv", h, table)
+        else:
+            out = h @ table.T
+    else:
+        head = p["lm_head"].astype(h.dtype)
+        if cfg.n_codebooks > 1:
+            out = jnp.einsum("...d,kdv->...kv", h, head)
+        else:
+            out = h @ head
+    return softcap(out, cfg.final_logit_softcap)

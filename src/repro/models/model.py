@@ -1,0 +1,253 @@
+"""Model assembly: init / forward / prefill / decode over the layer schedule."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ExecutionPlan, ATTN_GLOBAL, MLP_DENSE
+from repro.models import blocks as B
+from repro.models.layers import (Params, embed_tokens, init_embeddings,
+                                 lm_logits, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    schedule = B.layer_schedule(cfg)
+    keys = jax.random.split(key, len(schedule) + 3)
+    p: Params = {"embed": init_embeddings(keys[0], cfg)}
+    segs = []
+    for si, seg in enumerate(schedule):
+        seg_keys = jax.random.split(keys[si + 1], seg.count * len(seg.sigs))
+        seg_keys = seg_keys.reshape(seg.count, len(seg.sigs), 2)
+        seg_p = {}
+        for pi, sig in enumerate(seg.sigs):
+            seg_p[f"pos{pi}"] = jax.vmap(
+                lambda k, s=sig: B.init_layer(k, cfg, s))(seg_keys[:, pi])
+        segs.append(seg_p)
+    p["segments"] = segs
+    p["final_norm"] = (jnp.zeros((cfg.d_model,)) if cfg.name.startswith("gemma")
+                       else jnp.ones((cfg.d_model,)))
+    if cfg.mtp_depth:
+        sig = B.LayerSig(cfg.layer_kind(cfg.n_layers - 1), 0, MLP_DENSE)
+        p["mtp"] = {
+            "block": B.init_layer(keys[-1], cfg, sig),
+            "proj": jax.random.normal(keys[-2], (2 * cfg.d_model, cfg.d_model))
+                    * 0.02,
+            "norm": jnp.ones((cfg.d_model,)),
+        }
+    return p
+
+
+def param_count_actual(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (train): scan over segments
+# ---------------------------------------------------------------------------
+def forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+            plan: ExecutionPlan, positions: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B,S[,K]) -> (final hidden states (B,S,D), aux_loss scalar)."""
+    dtype = jnp.dtype(plan.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cfg, dtype)
+    bsz, seq = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+    ctx = B.BlockCtx(mode="train", q_pos=positions, k_pos=positions,
+                     attn_impl=plan.attn_impl, chunk=1024)
+    schedule = B.layer_schedule(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for seg, seg_p in zip(schedule, params["segments"]):
+        x, aux = _run_segment(cfg, seg, seg_p, x, aux, ctx, plan)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps,
+                 gemma_style=cfg.name.startswith("gemma"))
+    return h, aux
+
+
+def _run_segment(cfg, seg: B.Segment, seg_p: Params, x, aux, ctx: B.BlockCtx,
+                 plan: ExecutionPlan):
+    def apply_one(x, aux, layer_p):
+        for pi, sig in enumerate(seg.sigs):
+            x, _, a = B.apply_block(cfg, sig, layer_p[f"pos{pi}"], x, ctx)
+            aux = aux + a
+        return x, aux
+
+    if seg.count == 1 or not plan.scan_layers:
+        for step in range(seg.count):
+            lp = jax.tree.map(lambda a: a[step], seg_p)
+            fn = apply_one
+            if plan.remat != "none":
+                fn = jax.checkpoint(fn)
+            x, aux = fn(x, aux, lp)
+        return x, aux
+
+    def body(carry, layer_p):
+        x, aux = carry
+        return apply_one(x, aux, layer_p), None
+
+    if plan.remat != "none":
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, aux), seg_p)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               paged: bool = True, dtype=jnp.bfloat16,
+               page_owner_stride: int = 1) -> List[Params]:
+    """Per-layer cache list (global layer order)."""
+    caches = []
+    for sig in B.layer_sigs(cfg):
+        caches.append(B.init_layer_cache(
+            cfg, sig, batch, max_len, paged=paged, dtype=dtype,
+            page_owner_stride=page_owner_stride))
+    return caches
+
+
+def default_block_tables(cfg: ArchConfig, batch: int, max_len: int,
+                         page_owner_stride: int = 1,
+                         batch_shards: int = 1) -> jnp.ndarray:
+    """Identity page layout matching init_layer_cache's striped pool:
+    page ``p`` of (locally-indexed) sequence ``b_loc`` lives at local extent
+    ``b_loc * K + p // stride`` on stripe ``p % stride``.
+
+    The serving engine replaces this with DBS-allocated tables; dry-runs and
+    smoke tests use the identity layout.
+    """
+    import math as _m
+    stride = max(page_owner_stride, 1)
+    n_pages = _m.ceil(max_len / cfg.page_blocks)
+    k_per = _m.ceil(n_pages / stride)
+    b_local = jnp.arange(batch, dtype=jnp.int32) % max(batch // max(batch_shards, 1), 1)
+    p = jnp.arange(n_pages, dtype=jnp.int32)
+    return (p // stride)[None, :] + (b_local * k_per)[:, None]
+
+
+def with_block_tables(caches: List[Params], bt: jnp.ndarray) -> List[Params]:
+    out = []
+    for c in caches:
+        if c is not None and "block_table" in c:
+            c = dict(c)
+            c["block_table"] = bt[:, : c["block_table"].shape[1]]
+        out.append(c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (unrolled layers, heterogeneous caches)
+# ---------------------------------------------------------------------------
+def _iter_layers(cfg, params):
+    """Yields (global_layer_idx, sig, layer_params)."""
+    if "layers_unstacked" in params:
+        for li, (sig, lp) in enumerate(zip(B.layer_sigs(cfg),
+                                           params["layers_unstacked"])):
+            yield li, sig, lp
+        return
+    schedule = B.layer_schedule(cfg)
+    li = 0
+    for seg, seg_p in zip(schedule, params["segments"]):
+        for step in range(seg.count):
+            for pi, sig in enumerate(seg.sigs):
+                lp = jax.tree.map(lambda a: a[step], seg_p[f"pos{pi}"])
+                yield li, sig, lp
+                li += 1
+
+
+def unstack_params(params: Params, cfg: ArchConfig) -> Params:
+    """Per-layer parameter trees for the decode path (§Perf iteration A4).
+
+    Stacked segments are right for the training scan, but slicing them
+    per-layer inside the decode step makes every layer's weight read charge
+    (and on some backends copy) the whole stack. Serving engines therefore
+    hold weights unstacked; this converts once, outside the step.
+    """
+    out = {k: v for k, v in params.items() if k != "segments"}
+    out["layers_unstacked"] = [lp for _, _, lp in _iter_layers(cfg, params)]
+    return out
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+            plan: ExecutionPlan, caches: List[Params],
+            positions: Optional[jnp.ndarray] = None,
+            paged_decode_fn=None, page_owner_stride: int = 1,
+            owner_rank: int = 0) -> Tuple[jnp.ndarray, List[Params]]:
+    """Full-sequence forward that also fills the caches.
+
+    Returns (logits of last position (B,V[,K->(B,K,V)]), caches)."""
+    dtype = jnp.dtype(plan.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cfg, dtype)
+    bsz, seq = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+    new_caches = list(caches)
+    for li, sig, lp in _iter_layers(cfg, params):
+        def run(x_, lp_, cache_, sig=sig):
+            ctx = B.BlockCtx(mode="prefill", q_pos=positions, k_pos=positions,
+                             cache=cache_, attn_impl=plan.attn_impl,
+                             chunk=1024, paged_decode_fn=paged_decode_fn,
+                             page_owner_stride=page_owner_stride,
+                             owner_rank=owner_rank)
+            out, nc, _ = B.apply_block(cfg, sig, lp_, x_, ctx)
+            return out, nc
+        if plan.remat != "none":
+            run = jax.checkpoint(run)
+        x, new_caches[li] = run(x, lp, caches[li])
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps,
+                 gemma_style=cfg.name.startswith("gemma"))
+    logits = lm_logits(params["embed"], h, cfg)
+    return logits[:, 0], new_caches
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, pos: jnp.ndarray,
+                cfg: ArchConfig, plan: ExecutionPlan, caches: List[Params],
+                paged_decode_fn=None, page_owner_stride: int = 1,
+                owner_rank: int = 0) -> Tuple[jnp.ndarray, List[Params]]:
+    """One decode step. tokens: (B,) or (B,K); pos: (B,) current positions.
+
+    Returns (logits (B,V) or (B,K,V), updated caches)."""
+    dtype = jnp.dtype(plan.compute_dtype)
+    tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+    x = embed_tokens(params["embed"], tok, cfg, dtype)          # (B,1,D)
+    q_pos = pos[:, None].astype(jnp.int32)
+    new_caches = list(caches)
+    for li, sig, lp in _iter_layers(cfg, params):
+        ctx = B.BlockCtx(mode="decode", q_pos=q_pos, cache=caches[li],
+                         attn_impl=plan.attn_impl,
+                         paged_decode_fn=paged_decode_fn,
+                         page_owner_stride=page_owner_stride,
+                         owner_rank=owner_rank)
+        x, new_caches[li], _ = B.apply_block(cfg, sig, lp, x, ctx)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps,
+                 gemma_style=cfg.name.startswith("gemma"))
+    logits = lm_logits(params["embed"], h, cfg)
+    return logits[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# deepseek MTP (multi-token prediction) auxiliary hidden states
+# ---------------------------------------------------------------------------
+def mtp_hidden(params: Params, h: jnp.ndarray, tokens: jnp.ndarray,
+               cfg: ArchConfig, plan: ExecutionPlan) -> jnp.ndarray:
+    """DeepSeek-V3 MTP: combine h_t with emb(token_{t+1}) and run one extra
+    block; the caller computes the t+2 loss on the result. h: (B,S,D)."""
+    mtp = params["mtp"]
+    dtype = h.dtype
+    emb_next = embed_tokens(params["embed"], tokens[:, 1:], cfg, dtype)
+    h_in = jnp.concatenate([
+        rms_norm(h[:, :-1], mtp["norm"], cfg.norm_eps), emb_next], axis=-1)
+    h_in = h_in @ mtp["proj"].astype(dtype)
+    bsz, seq = h_in.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+    ctx = B.BlockCtx(mode="train", q_pos=positions, k_pos=positions,
+                     attn_impl=plan.attn_impl)
+    sig = B.LayerSig(cfg.layer_kind(cfg.n_layers - 1), 0, MLP_DENSE)
+    out, _, _ = B.apply_block(cfg, sig, mtp["block"], h_in, ctx)
+    return out

@@ -1,0 +1,242 @@
+"""State-space / linear-recurrence token mixers: Mamba (hymba branch), RWKV-6.
+
+Both use the chunked formulation: sequence processed in fixed chunks with an
+O(1) carried state, quadratic-within-chunk math — the same schedule the Pallas
+``rwkv6_scan`` kernel implements on TPU (VMEM-resident chunk, state in VREGs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rms_norm, _split
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Mamba branch (hymba hybrid heads)
+# ===========================================================================
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    e = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    kconv = cfg.ssm.conv_kernel
+    dt_rank = max(16, d // 16)
+    ks = _split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * e),
+        "conv": jax.random.normal(ks[1], (kconv, e)) / math.sqrt(kconv),
+        "w_bc": dense_init(ks[2], e, 2 * n),
+        "w_dt1": dense_init(ks[3], e, dt_rank),
+        "w_dt2": dense_init(ks[4], dt_rank, e),
+        "dt_bias": jnp.full((e,), -4.6),          # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (e, 1))),
+        "d_skip": jnp.ones((e,)),
+        "out_proj": dense_init(ks[5], e, d),
+    }
+
+
+def _mamba_inner(p: Params, xz: jnp.ndarray, conv_state, ssm_state,
+                 chunk: int = 256, unroll: bool = False):
+    """Shared train/prefill core. xz: (B,S,2E) pre-activation projections.
+
+    conv_state: (B,K-1,E) trailing inputs; ssm_state: (B,E,N).
+    Returns (y (B,S,E), conv_state', ssm_state').
+    """
+    b, s, _ = xz.shape
+    e = xz.shape[-1] // 2
+    n = p["a_log"].shape[-1]
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time with carried state
+    kconv = p["conv"].shape[0]
+    xin = jnp.concatenate([conv_state, x], axis=1)             # (B, K-1+S, E)
+    new_conv_state = xin[:, -(kconv - 1):] if kconv > 1 else conv_state
+    xc = sum(xin[:, i:i + s] * p["conv"][i].astype(x.dtype) for i in range(kconv))
+    xc = jax.nn.silu(xc)
+
+    bc = xc @ p["w_bc"].astype(x.dtype)                        # (B,S,2N)
+    b_t, c_t = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus(
+        (xc @ p["w_dt1"].astype(x.dtype)) @ p["w_dt2"].astype(x.dtype)
+        + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)    # (B,S,E)
+    a = -jnp.exp(p["a_log"])                                   # (E,N)
+    xf = xc.astype(jnp.float32)
+
+    n_chunks = max(1, s // chunk)
+    chunk = s // n_chunks
+
+    def chunk_body(h, xs):
+        xcb, dtb, bb, cb = xs                                  # (B,C,E) / (B,C,N)
+        decay = jnp.exp(dtb[..., None] * a)                    # (B,C,E,N)
+        inp = (dtb * xcb)[..., None] * bb[:, :, None, :]       # (B,C,E,N)
+
+        def assoc(el1, el2):
+            a1, b1 = el1
+            a2, b2 = el2
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, b_sc = jax.lax.associative_scan(assoc, (decay, inp), axis=1)
+        hs = a_sc * h[:, None] + b_sc                          # (B,C,E,N)
+        y = jnp.einsum("bcen,bcn->bce", hs, cb)
+        return hs[:, -1], y
+
+    xs = tuple(t.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+               for t in (xf, dt, b_t, c_t))
+    new_ssm, ys = jax.lax.scan(jax.checkpoint(chunk_body), ssm_state, xs,
+                               unroll=unroll)
+    y = ys.swapaxes(0, 1).reshape(b, s, e)
+    y = y + xf * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x.dtype), new_conv_state, new_ssm
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, state=None, chunk: int = 256,
+                  unroll: bool = False):
+    """x: (B,S,D) -> (y (B,S,D), state). state=(conv (B,K-1,E), ssm (B,E,N))."""
+    b, s, _ = x.shape
+    if state is None:
+        state = mamba_init_state(p, b, x.dtype)
+    conv_state, ssm_state = state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    y, cs, ss = _mamba_inner(p, xz, conv_state, ssm_state, chunk=chunk,
+                             unroll=unroll)
+    return y @ p["out_proj"].astype(x.dtype), (cs, ss)
+
+
+def mamba_init_state(p: Params, batch: int, dtype=jnp.bfloat16):
+    e = p["in_proj"].shape[-1] // 2
+    n = p["a_log"].shape[-1]
+    kconv = p["conv"].shape[0]
+    return (jnp.zeros((batch, kconv - 1, e), dtype),
+            jnp.zeros((batch, e, n), jnp.float32))
+
+
+def mamba_step(p: Params, x: jnp.ndarray, state):
+    """Single-token decode. x: (B,1,D)."""
+    y, state = mamba_forward(p, x, state, chunk=1)
+    return y, state
+
+
+# ===========================================================================
+# RWKV-6 (Finch): data-dependent decay linear recurrence
+# ===========================================================================
+def init_rwkv6(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.ssm.rwkv_head_dim if cfg.ssm else 64
+    h = d // hd
+    lora = 32
+    ks = _split(key, 12)
+    return {
+        # time-mix
+        "mu": jax.random.uniform(ks[0], (5, d)),               # r,k,v,g,w shifts
+        "w_r": dense_init(ks[1], d, d),
+        "w_k": dense_init(ks[2], d, d),
+        "w_v": dense_init(ks[3], d, d),
+        "w_g": dense_init(ks[4], d, d),
+        "w_o": dense_init(ks[5], d, d),
+        "w0": jnp.full((d,), -6.0),                            # decay base
+        "w_lora1": dense_init(ks[6], d, lora),
+        "w_lora2": dense_init(ks[7], lora, d) * 0.1,
+        "u": jax.random.normal(ks[8], (h, hd)) * 0.1,          # bonus
+        "ln_x": jnp.ones((d,)),                                # per-head groupnorm
+        # channel-mix
+        "mu_c": jax.random.uniform(ks[9], (2, d)),
+        "c_k": dense_init(ks[10], d, cfg.d_ff),
+        "c_v": dense_init(ks[11], cfg.d_ff, d),
+        "c_r": dense_init(ks[0], d, d),
+    }
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hd = cfg.ssm.rwkv_head_dim if cfg.ssm else 64
+    h = d // hd
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), dtype),               # time-mix x_{t-1}
+        "shift_c": jnp.zeros((batch, d), dtype),               # channel-mix x_{t-1}
+    }
+
+
+def _rwkv_chunk(r, k, v, logw, u, s_in):
+    """One chunk of the RWKV6 recurrence (all fp32).
+
+    r,k,v: (B,C,H,hd); logw: (B,C,H,hd) (log decay, <= 0); u: (H,hd);
+    s_in: (B,H,hd,hd).  Returns (y (B,C,H,hd), s_out).
+    """
+    cum = jnp.cumsum(logw, axis=1)                             # inclusive
+    cum_excl = cum - logw                                      # exclusive
+    # inter-chunk: y_i += (r_i * exp(cum_excl_i)) @ S_in
+    r_dec = r * jnp.exp(cum_excl)
+    y = jnp.einsum("bchk,bhkv->bchv", r_dec, s_in)
+    # intra-chunk: s < i term with decay exp(cum_excl_i - cum_s)
+    att = jnp.einsum("bchk,bshk->bhcs", r_dec, k * jnp.exp(-cum))
+    c_len = r.shape[1]
+    tri = jnp.tril(jnp.ones((c_len, c_len), bool), k=-1)
+    att = jnp.where(tri[None, None], att, 0.0)
+    y = y + jnp.einsum("bhcs,bshv->bchv", att, v)
+    # diagonal bonus term: y_i += (r_i . (u * k_i)) v_i
+    y = y + jnp.sum(r * (u[None, None] * k), axis=-1, keepdims=True) * v
+    # state update: S_out = diag(exp(cum_C)) S_in + sum_s (k_s exp(cum_C-cum_s))^T v_s
+    total = cum[:, -1][:, None]                                # (B,1,H,hd)
+    k_dec = k * jnp.exp(total - cum)
+    s_out = jnp.exp(total[:, 0])[..., None] * s_in + jnp.einsum(
+        "bshk,bshv->bhkv", k_dec, v)
+    return y, s_out
+
+
+def rwkv6_time_mix(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                   cfg: ArchConfig, chunk: int = 64, unroll: bool = False):
+    """x: (B,S,D) -> (y, new_state pieces). Handles S==1 (decode) too."""
+    b, s, d = x.shape
+    hd = cfg.ssm.rwkv_head_dim if cfg.ssm else 64
+    h = d // hd
+    x_prev = jnp.concatenate([state["shift_t"][:, None], x[:, :-1]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x * mu[i] + x_prev * (1 - mu[i]) for i in range(5))
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(b, s, h, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(b, s, h, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(b, s, h, hd).astype(jnp.float32)
+    g = xg @ p["w_g"].astype(x.dtype)
+    logw = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + ((xw @ p["w_lora1"].astype(x.dtype)) @ p["w_lora2"].astype(x.dtype))
+        .astype(jnp.float32)).reshape(b, s, h, hd)
+
+    n_chunks = max(1, s // chunk)
+    c = s // n_chunks
+
+    def body(s_carry, xs):
+        rc, kc, vc, wc = xs
+        y, s_new = _rwkv_chunk(rc, kc, vc, wc, p["u"].astype(jnp.float32), s_carry)
+        return s_new, y
+
+    xs = tuple(t.reshape(b, n_chunks, c, h, hd).swapaxes(0, 1)
+               for t in (r, k, v, logw))
+    s_out, ys = jax.lax.scan(jax.checkpoint(body), state["wkv"], xs,
+                             unroll=unroll)
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    # per-head group norm + gate + out proj
+    y = y.reshape(b, s, h, hd)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-5)
+    y = (y.reshape(b, s, d) * p["ln_x"]).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    out = y @ p["w_o"].astype(x.dtype)
+    return out, {"wkv": s_out, "shift_t": x[:, -1]}
+
+
+def rwkv6_channel_mix(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray]):
+    x_prev = jnp.concatenate([state["shift_c"][:, None], x[:, :-1]], axis=1)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x * mu[0] + x_prev * (1 - mu[0])
+    xr = x * mu[1] + x_prev * (1 - mu[1])
+    k = jnp.square(jax.nn.relu(xk @ p["c_k"].astype(x.dtype)))
+    v = k @ p["c_v"].astype(x.dtype)
+    r = jax.nn.sigmoid(xr @ p["c_r"].astype(x.dtype))
+    return r * v, {"shift_c": x[:, -1]}

@@ -1,0 +1,1 @@
+from repro.serving.engine import GenRequest, ServeEngine  # noqa: F401

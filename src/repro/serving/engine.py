@@ -1,0 +1,274 @@
+"""ServeEngine: continuous batching on top of the optimized engine layers.
+
+One running engine = one "Longhorn node":
+
+- admission goes through the **multi-queue frontend** (ublk analogue),
+- live requests own **slots** in a fixed SlotTable (Messages Array) — the
+  decode batch is always the full slot array, inactive lanes masked,
+- each request's KV state is a **DBS volume**: pages allocated from the
+  device pool by ``dbs.write_pages`` (control plane) as the sequence crosses
+  page boundaries; the DBS flattened extent map *is* the block table the
+  attention gather reads through,
+- **forking** a session is ``dbs.clone`` — prefix pages shared, diverging
+  writes copy-on-write through the ``dbs_copy`` data plane (one copy per
+  layer pool),
+- completion retires the slot and ``dbs.delete_volume`` frees the extents.
+
+Single-host execution here (smoke/bench scale); the multi-pod data plane of
+the same decode step is exercised by launch/dryrun.py via shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ExecutionPlan
+from repro.core import dbs, slots
+from repro.core.frontend import MultiQueueFrontend, Request
+from repro.models import blocks as B
+from repro.models import model as M
+
+
+@dataclass
+class GenRequest:
+    req_id: int
+    prompt: np.ndarray            # (S,) int32 (or (S,K) for codebooks)
+    max_new: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    slot: int = -1
+    volume: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, n_queues: int = 2,
+                 plan: Optional[ExecutionPlan] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan or ExecutionPlan(remat="none", attn_impl="chunked",
+                                          compute_dtype="float32")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        page = cfg.page_blocks
+        self.n_pages = math.ceil(max_len / page)
+
+        self.frontend = MultiQueueFrontend(n_queues, n_slots, batch=n_slots)
+        # DBS metadata: volumes = sessions; extents shared across layers
+        # (every layer pool is indexed by the same extent ids).
+        n_extents = n_slots * self.n_pages * 2 + 8   # headroom for forks/CoW
+        self.state = dbs.make_state(n_extents, max_volumes=2 * n_slots,
+                                    max_pages=self.n_pages)
+        self.caches = M.init_cache(cfg, n_slots, max_len, paged=True,
+                                   dtype=jnp.dtype(self.plan.compute_dtype))
+        # paged pools must span the DBS extent space
+        self.caches = [self._grow_pool(c, n_extents) for c in self.caches]
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_vol = np.full((n_slots,), -1, np.int64)
+        self.live: Dict[int, GenRequest] = {}
+        self._steps = 0
+
+    def _grow_pool(self, cache, n_extents):
+        if cache is None or "pool_k" not in cache:
+            return cache
+        c = dict(cache)
+        for key in ("pool_k", "pool_v"):
+            p = cache[key]
+            c[key] = jnp.zeros((n_extents,) + p.shape[1:], p.dtype)
+        return c
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: GenRequest) -> None:
+        self.frontend.submit(Request(req_id=req.req_id, kind="write",
+                                     volume=-1, page=0, payload=req))
+
+    def fork(self, req_id: int, new_req_id: int, max_new: int = 16
+             ) -> Optional[GenRequest]:
+        """Fork a live session: clone its DBS volume (prefix sharing + CoW)."""
+        src = self.live.get(req_id)
+        if src is None or src.slot < 0:
+            return None
+        self.state, vid = dbs.clone(self.state, jnp.int32(src.volume))
+        vid = int(vid)
+        if vid < 0:
+            return None
+        child = GenRequest(req_id=new_req_id,
+                           prompt=np.zeros((0,), np.int64), max_new=max_new)
+        child.out_tokens = list(src.out_tokens)
+        # claim a slot directly (fork bypasses the admission queue)
+        self.frontend.table, ids, ok = slots.admit(
+            self.frontend.table, jnp.array([True]),
+            jnp.array([vid], jnp.int32), jnp.array([0], jnp.int32),
+            jnp.int32(self._steps))
+        if not bool(ok[0]):
+            self.state = dbs.delete_volume(self.state, jnp.int32(vid))
+            return None
+        child.slot = int(ids[0])
+        child.volume = vid
+        self.slot_vol[child.slot] = vid
+        self.pos = self.pos.at[child.slot].set(self.pos[src.slot])
+        self.live[new_req_id] = child
+        return child
+
+    # ------------------------------------------------------- engine stepping
+    def _admit(self) -> List[GenRequest]:
+        slot_ids, reqs = self.frontend.poll_batch()
+        admitted = []
+        for sid, r in zip(jax.device_get(slot_ids), reqs):
+            g: GenRequest = r.payload
+            g.slot = int(sid)
+            self.state, vid = dbs.create_volume(self.state)
+            g.volume = int(vid)
+            self.slot_vol[g.slot] = g.volume
+            self.live[g.req_id] = g
+            admitted.append(g)
+        return admitted
+
+    def _alloc_pages(self, vols, pages, mask):
+        """Control plane: allocate/CoW the page each lane writes this step."""
+        bits = jnp.ones(pages.shape, jnp.uint32)  # page-granular tracking
+        self.state, ops = dbs.write_pages(self.state, vols, pages, bits,
+                                          mask=mask)
+        if bool(jax.device_get(jnp.any(ops.cow_src >= 0))):
+            from repro.kernels.dbs_copy import dbs_copy
+            for i, c in enumerate(self.caches):
+                if c is not None and "pool_k" in c:
+                    c = dict(c)
+                    for key in ("pool_k", "pool_v"):
+                        p = c[key]
+                        flat = p.reshape(p.shape[0], p.shape[1], -1)
+                        flat = dbs_copy(flat, ops.cow_src, ops.dst,
+                                        ops.cow_src >= 0)
+                        c[key] = flat.reshape(p.shape)
+                    self.caches[i] = c
+        return ops
+
+    def _prefill_one(self, g: GenRequest) -> None:
+        prompt = np.asarray(g.prompt)
+        s = prompt.shape[0]
+        if s == 0:
+            return
+        page = self.cfg.page_blocks
+        pad = (-s) % page
+        padded = np.pad(prompt, [(0, pad)] + [(0, 0)] * (prompt.ndim - 1))
+        n_pages = padded.shape[0] // page
+        # allocate all prompt pages up front
+        vols = jnp.full((n_pages,), g.volume, jnp.int32)
+        self._alloc_pages(vols, jnp.arange(n_pages, dtype=jnp.int32),
+                          jnp.ones((n_pages,), bool))
+        # single-sequence prefill writing into this engine's pools
+        bt_row = self.state.table[g.volume][None, :]
+        caches_one = []
+        for c in self.caches:
+            if c is None:
+                caches_one.append(None)
+                continue
+            c1 = {}
+            for k, v in c.items():
+                if k.startswith("pool"):
+                    c1[k] = v
+                elif k == "block_table":
+                    c1[k] = bt_row
+                else:
+                    c1[k] = v[g.slot:g.slot + 1]
+            caches_one.append(c1)
+        tok = jnp.asarray(padded)[None]
+        logits, caches_one = M.prefill(self.params, tok, self.cfg, self.plan,
+                                       caches_one)
+        # scatter the per-sequence cache rows back; pools are shared already
+        new_caches = []
+        for c, c1 in zip(self.caches, caches_one):
+            if c is None:
+                new_caches.append(None)
+                continue
+            cn = dict(c)
+            for k, v in c1.items():
+                if k.startswith("pool"):
+                    cn[k] = v
+                elif k != "block_table":
+                    cn[k] = cn[k].at[g.slot].set(v[0])
+            new_caches.append(cn)
+        self.caches = new_caches
+        self.pos = self.pos.at[g.slot].set(s)
+        if s < padded.shape[0]:
+            pass  # padded tail positions are masked by pos-based causality
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One continuous-batching iteration. Returns [(req_id, token)]."""
+        for g in self._admit():
+            self._prefill_one(g)
+        active = np.array([self.slot_vol[i] >= 0 and any(
+            r.slot == i and not r.done for r in self.live.values())
+            for i in range(self.n_slots)])
+        if not active.any():
+            return []
+        # control plane: the page each active lane writes this step
+        vols = jnp.asarray(np.where(active, self.slot_vol, 0), jnp.int32)
+        pages = self.pos // self.cfg.page_blocks
+        self._alloc_pages(vols, pages, jnp.asarray(active))
+        # refresh block tables from the DBS extent maps
+        bt = self.state.table[vols]
+        self.caches = M.with_block_tables(self.caches, bt)
+        # data plane
+        last = jnp.asarray(
+            [(self.live_by_slot(i).out_tokens[-1]
+              if self.live_by_slot(i) and self.live_by_slot(i).out_tokens
+              else self._last_prompt_token(i)) for i in range(self.n_slots)],
+            jnp.int32)
+        if self.cfg.n_codebooks > 1:
+            last = jnp.broadcast_to(last[:, None], (self.n_slots,
+                                                    self.cfg.n_codebooks))
+        logits, self.caches = M.decode_step(
+            self.params, last, self.pos, self.cfg, self.plan, self.caches)
+        nxt = jnp.argmax(logits, axis=-1)
+        if self.cfg.n_codebooks > 1:
+            nxt = nxt[:, 0]
+        nxt_host = np.asarray(jax.device_get(nxt))
+        self.pos = self.pos + jnp.asarray(active, jnp.int32)
+        out = []
+        self._steps += 1
+        for i in range(self.n_slots):
+            if not active[i]:
+                continue
+            g = self.live_by_slot(i)
+            g.out_tokens.append(int(nxt_host[i]))
+            out.append((g.req_id, int(nxt_host[i])))
+            if len(g.out_tokens) >= g.max_new or \
+                    int(jax.device_get(self.pos[i])) >= self.max_len:
+                self._finish(g)
+        return out
+
+    def live_by_slot(self, slot: int) -> Optional[GenRequest]:
+        for g in self.live.values():
+            if g.slot == slot and not g.done:
+                return g
+        return None
+
+    def _last_prompt_token(self, slot: int) -> int:
+        g = self.live_by_slot(slot)
+        if g is None or g.prompt.shape[0] == 0:
+            return 0
+        t = g.prompt[-1]
+        return int(t if np.ndim(t) == 0 else t.flat[0])
+
+    def _finish(self, g: GenRequest) -> None:
+        g.done = True
+        self.frontend.table = slots.retire(
+            self.frontend.table, jnp.asarray([g.slot], jnp.int32))
+        self.state = dbs.delete_volume(self.state, jnp.int32(g.volume))
+        self.slot_vol[g.slot] = -1
+        g.slot = -1
+
+    def run(self, max_steps: int = 64) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            self.step()
+            if all(g.done for g in self.live.values()) and \
+                    self.frontend.depth() == 0:
+                break
+        return {rid: g.out_tokens for rid, g in self.live.items()}

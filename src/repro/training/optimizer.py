@@ -1,0 +1,170 @@
+"""Optimizers (no external deps): AdamW and Adafactor, schedules, clipping.
+
+Adafactor (factored second moments) is the default for >60B-param configs:
+its state is ~1 byte/param instead of AdamW's 8, which is what lets e.g.
+deepseek-v3-671b fit the 512-chip mesh (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    max_grad_norm: float = 1.0
+
+
+def adamw_init(params: Params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    count = state["count"] + 1
+    lr = warmup_cosine(cfg.lr, cfg.warmup, cfg.total_steps)(count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_p = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8          # t^-decay second-moment decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    max_grad_norm: float = 1.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Params) -> Dict[str, Any]:
+    def st(x):
+        if _factored(x.shape):
+            return {"vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(x, jnp.float32)}
+    return {"slots": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: AdafactorConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    beta = 1.0 - t ** (-cfg.decay)
+    lr = warmup_cosine(cfg.lr, cfg.warmup, cfg.total_steps)(count)
+
+    def upd(g, slot, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps
+        if "vr" in slot:
+            vr = beta * slot["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * slot["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta * slot["v"] + (1 - beta) * g2
+            new_slot = {"v": vhat}
+        u = g32 * jax.lax.rsqrt(vhat + cfg.eps)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p32
+        return new_slot, (p32 - lr * u).astype(p.dtype)
+
+    is_slot = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_slots = treedef.unflatten([o[0] for o in out])
+    new_p = treedef.unflatten([o[1] for o in out])
+    return new_p, {"slots": new_slots, "count": count}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# uniform facade
+# ---------------------------------------------------------------------------
+def make_optimizer(name: str, **overrides):
+    """Returns (init_fn, update_fn(grads, state, params))."""
+    if name == "adamw":
+        cfg = AdamWConfig(**overrides)
+        return adamw_init, partial(adamw_update, cfg)
+    if name == "adafactor":
+        cfg = AdafactorConfig(**overrides)
+        return adafactor_init, partial(adafactor_update, cfg)
+    raise ValueError(f"unknown optimizer {name!r}")

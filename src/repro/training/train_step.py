@@ -1,0 +1,126 @@
+"""Loss + train step: chunked cross-entropy, microbatch accumulation, remat.
+
+The chunked CE never materializes the full (B, S, V) logits tensor — it scans
+over sequence chunks (checkpointed), which for 256k-vocab archs (gemma2/3) is
+the difference between a 17 GB and a ~70 MB logits footprint per microbatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ExecutionPlan
+from repro.models import forward, mtp_hidden
+from repro.models.layers import lm_logits
+from repro.training.optimizer import make_optimizer
+
+Params = Any
+MTP_WEIGHT = 0.1
+AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy
+# ---------------------------------------------------------------------------
+def chunked_cross_entropy(params_embed: Params, h: jnp.ndarray,
+                          labels: jnp.ndarray, cfg: ArchConfig,
+                          chunk: int = 0) -> jnp.ndarray:
+    """h: (B,S,D); labels: (B,S) or (B,S,K). Returns mean NLL over tokens."""
+    b, s, _ = h.shape
+    if chunk <= 0 or s % chunk or s <= chunk:
+        return _ce_block(params_embed, h, labels, cfg)
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, h.shape[-1]).swapaxes(0, 1)
+    lc = (labels.reshape((b, n, chunk) + labels.shape[2:])).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hh, ll = xs
+        return carry + _ce_block(params_embed, hh, ll, cfg) * (1.0 / n), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                            (hc, lc))
+    return total
+
+
+def _ce_block(params_embed, h, labels, cfg) -> jnp.ndarray:
+    logits = lm_logits(params_embed, h, cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            plan: ExecutionPlan) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    h, aux = forward(params, tokens, cfg, plan)
+    chunk = plan.logits_chunk
+    loss = chunked_cross_entropy(params["embed"], h, labels, cfg, chunk)
+    metrics = {"ce": loss}
+    if cfg.moe is not None and not cfg.moe.router_aux_free:
+        loss = loss + AUX_WEIGHT * aux
+        metrics["aux"] = aux
+    if cfg.mtp_depth and "mtp" in params:
+        h_mtp = mtp_hidden(params, h, tokens, cfg, plan)
+        # predict token t+2 from position t (labels already = t+1 shift)
+        mtp_loss = chunked_cross_entropy(
+            params["embed"], h_mtp[:, :-1], labels[:, 2:], cfg, chunk)
+        loss = loss + MTP_WEIGHT * mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# train step (with microbatch gradient accumulation)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, plan: ExecutionPlan,
+                    optimizer: Optional[str] = None, **opt_overrides
+                    ) -> Tuple[Callable, Callable]:
+    """Returns (init_opt_state_fn, train_step_fn).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    batch tensors have leading dim = global_batch; with plan.microbatches > 1
+    the step scans over microbatch slices accumulating grads (constant
+    memory in the number of microbatches).
+    """
+    opt_name = optimizer or plan.optimizer
+    opt_init, opt_update = make_optimizer(opt_name, **opt_overrides)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, plan)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        mb = plan.microbatches
+        if mb <= 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def slice_mb(x, i):
+                per = x.shape[0] // mb
+                return jax.lax.dynamic_slice_in_dim(x, i * per, per, axis=0)
+
+            def body(carry, i):
+                acc = carry
+                micro = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                g, m = grads_of(params, micro)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            acc, ms = jax.lax.scan(body, zeros, jnp.arange(mb))
+            grads = jax.tree.map(lambda g: (g / mb).astype(g.dtype), acc)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        new_params, new_opt, gnorm = opt_update(grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return opt_init, train_step

@@ -1,0 +1,284 @@
+"""Post-SPMD HLO analysis: loop-aware collective traffic accounting.
+
+``cost_analysis()`` does not expose collective traffic, and XLA:CPU's cost
+analysis counts ``while`` (scan) bodies once rather than trip-count times. We
+therefore parse the compiled module text ourselves:
+
+- split into computations,
+- per computation: sum collective payload bytes (result shapes) and record
+  calls (``while`` bodies with trip counts recovered from their condition
+  computations, ``call``/``conditional``/fusion subcomputations),
+- DFS from ENTRY multiplying by trip counts.
+
+Payload convention: we count the *result* bytes of each collective (for
+all-reduce this equals the operand; for all-gather it is the gathered size,
+an upper bound of ~G/(G-1) on wire traffic; reduce-scatter the scattered
+result, a lower bound). This is the collective_bytes fed to the roofline's
+``collective_bytes / (chips * link_bw)`` term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=(%?[\w.\-]+), body=(%?[\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|branch_computations)=\{?(%?[\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def result_bytes(line: str) -> int:
+    """Bytes of the op's result: shapes between '=' and the op name."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    # result type is everything between '=' and the opcode token
+    m = re.match(r"\s*((?:\([^)]*\))|(?:[a-z0-9_\[\],{}/ ]+?))\s+[a-z\-]+\(",
+                 line[eq + 1:])
+    seg = m.group(1) if m else line[eq + 1: eq + 160]
+    return sum(shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(seg))
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(c) for l in cond_lines for c in _CONST_RE.findall(l)]
+    return max(consts) if consts else 1
+
+
+def collective_stats(text: str) -> Dict[str, Dict[str, float]]:
+    raw = _split_raw(text)
+    entry = raw.pop("__entry_name__", None)
+    if entry is None:
+        entry = max(raw, key=lambda k: len(raw[k][1]), default=None)
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0})
+    seen_stack = []
+
+    def walk(name: str, mult: float):
+        if name not in raw or name in seen_stack or mult <= 0:
+            return
+        seen_stack.append(name)
+        for line in raw[name][1]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(raw[cond][1] if cond in raw else [])
+                walk(body, mult * trips)
+                continue
+            for kind in COLLECTIVES:
+                if f" {kind}(" in line or f"{kind}-start(" in line:
+                    if "-done(" in line:
+                        continue
+                    stats[kind]["count"] += mult
+                    stats[kind]["bytes"] += result_bytes(line) * mult
+                    break
+            else:
+                cm = _CALL_RE.search(line)
+                if cm and ("call(" in line or "conditional(" in line):
+                    walk(cm.group(1), mult)
+        seen_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    return dict(stats)
+
+
+def split_computations(text: str):
+    raw = _split_raw(text)
+    raw.pop("__entry_name__", None)
+    return {k: v[1] for k, v in raw.items()}
+
+
+def total_collective_bytes(text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(text).values())
+
+
+# ---------------------------------------------------------------------------
+# loop-aware module costs (flops / bytes) — XLA:CPU cost_analysis counts scan
+# bodies once, so we re-derive costs from the module text ourselves and
+# multiply while bodies by their trip counts. Validated against cost_analysis
+# on fully-unrolled lowerings (see EXPERIMENTS.md §Roofline methodology).
+# ---------------------------------------------------------------------------
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OPC_RE = re.compile(r"=\s*(?:\([^()]*\)|[a-z0-9_\[\],{}/ ]+?)\s+([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|[a-z0-9_\[\],{}/ ]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "reshape", "copy-start", "copy-done", "partition-id",
+             "replica-id", "iota", "opt-barrier"}
+_RECURSE_OPS = {"call", "conditional", "while"}
+
+
+def _dims_of(seg: str) -> List[Tuple[str, List[int]]]:
+    return [(d, [int(x) for x in dims.split(",")] if dims.strip() else [])
+            for d, dims in _SHAPE_RE.findall(seg)]
+
+
+def _bytes_of_seg(seg: str) -> int:
+    return sum(shape_bytes(d, ",".join(map(str, dims)))
+               for d, dims in _dims_of(seg))
+
+
+class _Comp:
+    def __init__(self, header: str, lines: List[str]):
+        self.lines = lines
+        self.symbols: Dict[str, str] = {}      # %name -> result type segment
+        # parameters from the header
+        hdr_args = header[header.find("(") + 1: header.rfind("->")]
+        for pm in re.finditer(r"([\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\])", hdr_args):
+            self.symbols["%" + pm.group(1)] = pm.group(2)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            eq = line.find("=")
+            om = _OPC_RE.search(line)
+            end = om.start(1) if om else eq + 120
+            self.symbols[dm.group(1)] = line[eq + 1:end]
+
+    def sym_bytes(self, name: str) -> int:
+        return _bytes_of_seg(self.symbols.get(name, ""))
+
+
+def module_costs(text: str) -> Dict[str, float]:
+    """Loop-aware {flops, bytes, collective_bytes, collective_count}."""
+    raw = _split_raw(text)
+    entry = raw.pop("__entry_name__", None)
+    comps = {name: _Comp(header, lines)
+             for name, (header, lines) in raw.items()}
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k].lines), default=None)
+
+    totals = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+              "collective_count": 0.0}
+    stack = []
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in stack or mult <= 0:
+            return
+        stack.append(name)
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            om = _OPC_RE.search(line)
+            opc = om.group(1) if om else ""
+            if opc in _FREE_OPS:
+                continue
+            if opc == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond = comps.get(wm.group(1))
+                    trips = _trip_count(cond.lines if cond else [])
+                    walk(wm.group(2), mult * trips)
+                continue
+            if opc in ("call", "conditional"):
+                cm = _CALL_RE.search(line)
+                if cm:
+                    walk(cm.group(1), mult)
+                continue
+            # --- accountable op -------------------------------------------
+            eq = line.find("=")
+            res_seg = line[eq + 1: om.start(1)] if om else ""
+            res_bytes = _bytes_of_seg(res_seg)
+            arg_str = _args_of(line, om.end(1) if om else eq)
+            operand_bytes = sum(comp.sym_bytes(o)
+                                for o in _OPERAND_RE.findall(arg_str))
+            totals["bytes"] += (res_bytes + operand_bytes) * mult
+            is_coll = any(opc.startswith(c) for c in COLLECTIVES)
+            if is_coll and not opc.endswith("-done"):
+                totals["collective_bytes"] += res_bytes * mult
+                totals["collective_count"] += mult
+            if opc == "dot":
+                res_elems = sum(
+                    _prod(dims) for _, dims in _dims_of(res_seg))
+                lhs = _OPERAND_RE.search(arg_str)
+                cdims = _CDIMS_RE.search(line)
+                k = 1
+                if lhs and cdims and cdims.group(1).strip():
+                    lhs_dims = _dims_of(comp.symbols.get(lhs.group(1), ""))
+                    if lhs_dims:
+                        for ci in cdims.group(1).split(","):
+                            idx = int(ci)
+                            if idx < len(lhs_dims[0][1]):
+                                k *= lhs_dims[0][1][idx]
+                totals["flops"] += 2.0 * res_elems * k * mult
+            elif opc in ("fusion", "reduce", "convert", "add", "multiply",
+                         "exponential", "divide", "subtract", "rsqrt",
+                         "tanh", "custom-call", "select", "compare", "maximum"):
+                res_elems = sum(_prod(dims) for _, dims in _dims_of(res_seg))
+                totals["flops"] += float(res_elems) * mult
+        stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    return totals
+
+
+def _prod(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _args_of(line: str, start: int) -> str:
+    args = line[start:]
+    depth, end = 0, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return args[:end + 1]
+
+
+def _split_raw(text: str):
+    out: Dict[str, Tuple[str, List[str]]] = {}
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and \
+                line.rstrip().endswith("{"):
+            stripped = line.replace("ENTRY ", "").strip()
+            m = _HEADER_RE.match(stripped)
+            name = m.group(1) if m else stripped.split()[0]
+            out[name] = (line, [])
+            cur = name
+            if "ENTRY" in line:
+                out["__entry_name__"] = name  # type: ignore
+        elif cur is not None:
+            out[cur][1].append(line)
+    return out
+
+
+def count_ops(text: str, names=("fusion", "dot", "custom-call")) -> Dict[str, int]:
+    out = {}
+    for n in names:
+        out[n] = len(re.findall(rf"= [^=]*?\b{n}\b", text))
+    return out

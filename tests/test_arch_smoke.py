@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced same-family configs on CPU.
+
+Each arch: forward shapes + finiteness, one train step (loss finite,
+decreases over 2 steps), prefill+decode consistency with the paged-DBS
+cache path (decode logits after prefill == forward logits of the extended
+sequence).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ExecutionPlan, smoke_config
+from repro.models import (decode_step, default_block_tables, forward,
+                          init_cache, init_params, prefill, with_block_tables)
+from repro.models.layers import lm_logits
+from repro.models.model import param_count_actual
+from repro.training.train_step import make_train_step
+
+PLAN = ExecutionPlan(remat="block", attn_impl="chunked",
+                     compute_dtype="float32", microbatches=1, logits_chunk=0)
+
+
+def _tokens(cfg, key, b, s):
+    shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    assert param_count_actual(params) > 0
+    b, s = 2, 32
+    tokens = _tokens(cfg, key, b, s)
+    h, aux = forward(params, tokens, cfg, PLAN)
+    assert h.shape == (b, s, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all(), "NaN in forward"
+
+    batch = {"tokens": tokens, "labels": tokens}
+    opt_init, step = make_train_step(cfg, PLAN, total_steps=8, warmup=1)
+    opt = opt_init(params)
+    jstep = jax.jit(step)
+    p1, opt, m1 = jstep(params, opt, batch)
+    p2, opt, m2 = jstep(p1, opt, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]) + 0.05, \
+        f"loss not improving: {float(m1['loss'])} -> {float(m2['loss'])}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """decode(t+1 | prefill(0..t)) must equal forward(0..t+1) at position t+1.
+
+    This exercises the whole storage path: paged pools, DBS block tables,
+    ring caches for sliding-window layers, recurrent states for SSM archs.
+    """
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    b = 2
+    s = 2 * cfg.page_blocks          # page-aligned prompt
+    tokens = _tokens(cfg, key, b, s + 1)
+    prompt, nxt = tokens[:, :s], tokens[:, s]
+
+    caches = init_cache(cfg, b, s + cfg.page_blocks, paged=True,
+                        dtype=jnp.float32)
+    caches = with_block_tables(
+        caches, default_block_tables(cfg, b, s + cfg.page_blocks))
+    _, caches = prefill(params, prompt, cfg, PLAN, caches)
+    pos = jnp.full((b,), s, jnp.int32)
+    logits_dec, _ = decode_step(params, nxt, pos, cfg, PLAN, caches)
+
+    h, _ = forward(params, tokens, cfg, PLAN)
+    from repro.models.layers import rms_norm
+    hN = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps,
+                  gemma_style=cfg.name.startswith("gemma"))
+    logits_fwd = lm_logits(params["embed"], hN, cfg)[:, 0]
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_fwd, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_layer_schedule_covers_all_layers():
+    from repro.configs import get_config
+    from repro.models.blocks import layer_schedule
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        segs = layer_schedule(cfg)
+        total = sum(seg.count * len(seg.sigs) for seg in segs)
+        assert total == cfg.n_layers, (arch, total, cfg.n_layers)
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned dimensions for every arch (guards against drift)."""
+    from repro.configs import get_config
+    expect = {
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("granite-moe-3b-a800m").moe.n_experts == 40
+    assert get_config("granite-moe-3b-a800m").moe.top_k == 8
+    assert get_config("deepseek-v3-671b").moe.n_experts == 256
+    assert get_config("hymba-1.5b").ssm.state_dim == 16

@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dbs_copy import dbs_copy, dbs_copy_reference
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_reference)
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_reference)
+from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,hd,win,cap", [
+    (2, 256, 4, 2, 64, 0, 0.0),
+    (1, 512, 8, 2, 128, 128, 50.0),
+    (2, 128, 4, 4, 64, 0, 30.0),
+    (1, 384, 6, 1, 64, 96, 0.0),      # odd seq (384 = 3*128), MQA
+])
+def test_flash_attention_sweep(b, s, h, kv, hd, win, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, window=win, logit_cap=cap)
+    ref = flash_attention_reference(q, k, v, window=win, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,hd,page,p,win,cap", [
+    (2, 4, 2, 64, 8, 6, 0, 0.0),
+    (3, 8, 4, 128, 16, 4, 24, 50.0),
+    (2, 4, 1, 64, 8, 5, 0, 30.0),
+    (1, 16, 16, 64, 32, 3, 0, 0.0),   # MHA (kv == h), paper page size
+])
+def test_paged_attention_sweep(b, h, kv, hd, page, p, win, cap, dtype):
+    e = b * p + 3
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    pk = jax.random.normal(ks[1], (e, page, kv, hd), dtype)
+    pv = jax.random.normal(ks[2], (e, page, kv, hd), dtype)
+    bt = jax.random.permutation(ks[3], jnp.arange(e))[:b * p]
+    bt = bt.reshape(b, p).astype(jnp.int32)
+    lengths = jnp.asarray([(p * page) - (i * 3 + 1) % (p * page - 1)
+                           for i in range(b)], jnp.int32)
+    out = paged_attention(q, pk, pv, bt, lengths, window=win, logit_cap=cap)
+    ref = paged_attention_reference(q, pk, pv, bt, lengths, window=win,
+                                    logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,h,hd,chunk", [
+    (2, 128, 3, 64, 32), (1, 64, 2, 32, 64), (2, 96, 4, 16, 16),
+])
+def test_rwkv6_scan_sweep(b, s, h, hd, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) * 0.5)
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    y, s_f = rwkv6_scan(r, k, v, logw, u, chunk=chunk)
+    yr, sr = rwkv6_scan_reference(r, k, v, logw, u,
+                                  jnp.zeros((b, h, hd, hd)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(sr),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("e,page,d,n", [(16, 8, 32, 4), (8, 4, 16, 4)])
+def test_dbs_copy_sweep(e, page, d, n):
+    ks = jax.random.split(KEY, 4)
+    pool = jax.random.normal(ks[0], (e, page, d))
+    src = jax.random.randint(ks[1], (n,), 0, e // 2)
+    dst = (jnp.arange(n) + e // 2).astype(jnp.int32)
+    mask = jax.random.bernoulli(ks[2], 0.7, (n,))
+    out = dbs_copy(pool, src, dst, mask)
+    ref = dbs_copy_reference(pool, src, dst, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+    # untouched extents really untouched
+    touched = set(int(x) for x in np.asarray(dst))
+    for i in range(e):
+        if i not in touched:
+            np.testing.assert_allclose(np.asarray(out[i]),
+                                       np.asarray(pool[i]))
