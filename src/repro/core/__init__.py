@@ -1,12 +1,15 @@
 # The paper's primary contribution: the optimized Longhorn engine layers,
-# adapted to the TPU data plane (see DESIGN.md):
+# adapted to the TPU data plane (see docs/ARCHITECTURE.md):
 #   slots.py        Messages Array + ID-token channel (paper §IV-C)
 #   dbs.py          device-side Direct Block Store (paper §IV-D)
 #   frontend.py     multi-queue ublk-style admission vs TGT-style baseline
 #   replication.py  write-to-all / read-round-robin / rebuild (paper §III)
+#   fused.py        single-program fused engine step (admit->CoW->complete)
 #   engine.py       the composed engine + upstream baseline + null layers
 from repro.core import dbs, slots  # noqa: F401
 from repro.core.engine import Engine, EngineConfig, UpstreamEngine  # noqa: F401
 from repro.core.frontend import (MultiQueueFrontend, Request,  # noqa: F401
                                  UpstreamFrontend)
+from repro.core.fused import (FusedBatch, fused_step,  # noqa: F401
+                              fused_step_read)
 from repro.core.replication import ReplicaGroup  # noqa: F401

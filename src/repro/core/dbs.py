@@ -20,6 +20,10 @@ Semantics implemented on device (everything jit-traceable, functional state):
 create/delete volume, snapshot, clone(=fork), copy-on-write writes, O(1)
 reads, unmap. Snapshot *merge-deletion* is host-side only (checkpoint store),
 as it is an offline maintenance path in the paper too.
+
+``write_pages`` is the control plane; the data plane is either
+``apply_write_ops`` (gather/scatter reference) or the Pallas ``dbs_copy``
+kernel on the fused hot path (core/fused.py, docs/KERNELS.md).
 """
 from __future__ import annotations
 
@@ -216,15 +220,21 @@ def write_pages(st: DBSState, vol: jnp.ndarray, pages: jnp.ndarray,
 
     safe_dst = jnp.maximum(dst, 0)
     old_bits = jnp.where(is_cow, st.bitmap[jnp.maximum(ext, 0)], jnp.uint32(0))
-    new_bits = jnp.where(
-        ok, st.bitmap[safe_dst] * in_place.astype(jnp.uint32)
-        | old_bits | block_bits, st.bitmap[safe_dst])
+    new_bits = (st.bitmap[safe_dst] * in_place.astype(jnp.uint32)
+                | old_bits | block_bits)
+    # lanes that perform no write scatter to an out-of-bounds index and are
+    # dropped: a write-back of the "current" value is NOT inert when another
+    # lane targets the same slot in the batch (duplicate-index scatter order
+    # is undefined, so the stale write-back can win) — e.g. the fused step
+    # routes read lanes through here with mask=False.
+    drop_ext = jnp.where(ok, safe_dst, st.n_extents)
+    drop_page = jnp.where(ok, pages, st.table.shape[1])
     st = dataclasses.replace(
         st, free=ring,
-        extent_owner=st.extent_owner.at[safe_dst].set(
-            jnp.where(ok, head, st.extent_owner[safe_dst])),
-        bitmap=st.bitmap.at[safe_dst].set(new_bits),
-        table=st.table.at[vol, pages].set(jnp.where(ok, dst, ext)),
+        extent_owner=st.extent_owner.at[drop_ext].set(
+            jnp.broadcast_to(head, drop_ext.shape), mode="drop"),
+        bitmap=st.bitmap.at[drop_ext].set(new_bits, mode="drop"),
+        table=st.table.at[vol, drop_page].set(dst, mode="drop"),
     )
     ops = WriteOps(dst=jnp.where(ok, dst, NULL),
                    cow_src=jnp.where(is_cow, ext, NULL),
@@ -251,14 +261,14 @@ def apply_write_ops(pool: jnp.ndarray, ops: WriteOps,
     safe_dst = jnp.maximum(ops.dst, 0)
     safe_src = jnp.maximum(ops.cow_src, 0)
     do_copy = ops.cow_src >= 0
-    copied = jnp.where(
-        do_copy[:, None, *([None] * (pool.ndim - 2))],
-        pool[safe_src], pool[safe_dst])
-    pool = pool.at[safe_dst].set(jnp.where(
-        ops.ok[:, None, *([None] * (pool.ndim - 2))], copied, pool[safe_dst]))
-    cur = pool[safe_dst, block_offsets]
-    pool = pool.at[safe_dst, block_offsets].set(
-        jnp.where(ops.ok[:, *([None] * (pool.ndim - 2))], payload, cur))
+    # broadcast the (B,) CoW mask over the extent (B, page, ...) trailing
+    # dims (reshape keeps this Python-3.10 compatible); failed lanes scatter
+    # out of bounds and are dropped — see the note in write_pages.
+    ext_mask = do_copy.reshape(do_copy.shape + (1,) * (pool.ndim - 1))
+    drop_dst = jnp.where(ops.ok, safe_dst, pool.shape[0])
+    copied = jnp.where(ext_mask, pool[safe_src], pool[safe_dst])
+    pool = pool.at[drop_dst].set(copied, mode="drop")
+    pool = pool.at[drop_dst, block_offsets].set(payload, mode="drop")
     return pool
 
 

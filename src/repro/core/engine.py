@@ -7,6 +7,9 @@ snapshot lookup on reads) so the benchmark ladder can reproduce Tables I/II.
 Null-layer switches implement the paper's §IV-A methodology:
   null_backend  — requests complete at the controller (frontend-only run)
   null_storage  — replicas ack without touching DBS (no-storage run)
+
+``comm="fused"`` routes pump() through the single-program fused step
+(core/fused.py). Pipeline and ladder columns: docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import dbs
 from repro.core.frontend import MultiQueueFrontend, Request, UpstreamFrontend
+from repro.core.fused import fused_step, fused_step_read
 from repro.core.replication import ReplicaGroup
 
 
@@ -37,6 +41,11 @@ class EngineConfig:
     null_storage: bool = False
     storage: str = "dbs"         # dbs | chained (sparse-file-style baseline)
     comm: str = "slots"          # slots (Messages Array) | loop (per-request)
+                                 # | fused (single-program step, core/fused.py)
+    cow: str = "auto"            # CoW data plane for comm="fused":
+                                 # auto (pallas on TPU, ref elsewhere)
+                                 # | pallas (force the dbs_copy kernel)
+                                 # | ref (apply_write_ops gather/scatter)
 
 
 class Engine:
@@ -50,6 +59,11 @@ class Engine:
 
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg
+        if cfg.comm == "fused" and cfg.storage != "dbs":
+            raise ValueError("comm='fused' requires storage='dbs'")
+        if cfg.cow not in ("auto", "pallas", "ref"):
+            raise ValueError(f"unknown cow impl {cfg.cow!r} "
+                             "(expected auto | pallas | ref)")
         self.frontend = MultiQueueFrontend(cfg.n_queues, cfg.n_slots, cfg.batch)
         if cfg.null_backend:
             self.backend = None
@@ -60,6 +74,8 @@ class Engine:
                 cfg.n_replicas, cfg.n_extents, cfg.max_volumes, cfg.max_pages,
                 cfg.page_blocks, cfg.payload_shape,
                 null_storage=cfg.null_storage)
+        self._cow = (cfg.cow if cfg.cow != "auto" else
+                     ("pallas" if jax.default_backend() == "tpu" else "ref"))
         self.completed = 0
 
     def create_volume(self) -> int:
@@ -96,10 +112,58 @@ class Engine:
             self.backend.write(vols[s], pages[s], offs[s], payload[s],
                                mask=mask[s])
 
+    def _pump_fused(self) -> int:
+        """One controller iteration as ONE compiled program (core/fused.py).
+
+        The host drains raw request arrays in, launches ``fused_step``, and
+        performs exactly one ``device_get`` — at completion, to learn which
+        lanes were admitted and to carry read payloads out. Between admission
+        and completion nothing crosses the host: the slot table, replica
+        DBS states and payload pools round-trip device-side.
+        """
+        reqs, batch = self.frontend.drain_batch(self.cfg.payload_shape)
+        if not reqs:
+            return 0
+        if self.backend is None:
+            states, pools = (), ()
+            rr = 0
+        else:
+            states, pools = self.backend.device_state()
+            rr = self.backend.bump_rr()
+        if any(r.kind == "write" for r in reqs):
+            table, states, pools, ok, reads = fused_step(
+                self.frontend.table, states, pools, batch, rr,
+                null_backend=self.cfg.null_backend,
+                null_storage=self.cfg.null_storage, cow=self._cow)
+            if self.backend is not None:
+                self.backend.set_device_state(states, pools)
+        else:
+            # read-only batch: replica state is untouched, so dispatch the
+            # input-only variant (no pool pass-through copies)
+            table, ok, reads = fused_step_read(
+                self.frontend.table, states, pools, batch, rr,
+                null_backend=self.cfg.null_backend,
+                null_storage=self.cfg.null_storage)
+        self.frontend.table = table
+        # the single host hop: completion flags + completed read payloads
+        ok_host, reads_host = jax.device_get((ok, reads))
+        done = 0
+        for i, r in enumerate(reqs):
+            if ok_host[i]:
+                if r.kind == "read":
+                    r.result = reads_host[i]
+                done += 1
+            else:
+                self.frontend.requeue(r)
+        self.completed += done
+        return done
+
     def pump(self) -> int:
         """One controller iteration: admit a batch, execute it against the
         replicas (writes mirrored / reads round-robin), complete the slots.
         Returns the number of completed requests."""
+        if self.cfg.comm == "fused":
+            return self._pump_fused()
         slot_ids, reqs = self.frontend.poll_batch()
         if not reqs:
             return 0

@@ -10,7 +10,11 @@ analogue is request admission into the compiled engine:
   upstream structure, used as the measured baseline.
 - ``MultiQueueFrontend``: N admission rings drained into a single *batched*
   jitted admission op backed by the SlotTable (Messages Array); queue depth =
-  slot count, no per-request host hop.
+  slot count, no per-request host hop. Two drain paths: ``poll_batch`` (the
+  unfused ``comm="slots"`` engine) and ``drain_batch`` (raw arrays for the
+  fused step — admission state never leaves the device).
+
+See docs/ARCHITECTURE.md for where the frontend sits in the pipeline.
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import slots
+from repro.core.fused import FusedBatch
 
 
 @dataclass
@@ -34,6 +39,8 @@ class Request:
     page: int
     block: int = 0
     payload: Any = None
+    result: Any = None        # filled with the read payload on completion
+                              # (fused path only; see docs/ARCHITECTURE.md)
 
 
 class UpstreamFrontend:
@@ -82,19 +89,60 @@ class MultiQueueFrontend:
     def depth(self) -> int:
         return sum(len(q) for q in self.queues)
 
-    def poll_batch(self) -> Tuple[jnp.ndarray, List[Request]]:
-        """Drain up to ``batch`` requests round-robin across queues and admit
-        them in ONE device op. Returns (slot_ids (k,), requests)."""
+    def requeue(self, req: Request) -> None:
+        """Put a not-admitted request back at the front of its queue."""
+        self.queues[req.req_id % len(self.queues)].appendleft(req)
+
+    def _drain(self, limit: int) -> List[Request]:
+        """Host-only round-robin drain of up to ``limit`` requests — no
+        device ops, shared by the unfused and fused admission paths."""
         reqs: List[Request] = []
         qs = [q for q in self.queues if q]
-        while qs and len(reqs) < self.batch:
+        while qs and len(reqs) < limit:
             for q in list(qs):
                 if not q:
                     qs.remove(q)
                     continue
                 reqs.append(q.popleft())
-                if len(reqs) >= self.batch:
+                if len(reqs) >= limit:
                     break
+        return reqs
+
+    def drain_batch(self, payload_shape: Tuple[int, ...] = ()
+                    ) -> Tuple[List[Request], Optional[FusedBatch]]:
+        """Drain up to ``batch`` requests into the fixed-shape raw arrays the
+        fused engine step consumes. Pure host->device traffic: admission
+        itself happens *inside* ``fused_step`` (core/fused.py), so no slot id
+        is ever read back — the admission state (``self.table``) stays on
+        device across ``pump()`` iterations."""
+        reqs = self._drain(self.batch)
+        if not reqs:
+            return [], None
+        n, b = len(reqs), self.batch
+        pad = b - n
+        ints = lambda xs: jnp.asarray(np.asarray(xs + [0] * pad, np.int32))
+        zero = jnp.zeros(payload_shape, jnp.float32)
+        payload = jnp.stack(
+            [r.payload if r.payload is not None else zero for r in reqs]
+            + [zero] * pad)
+        batch = FusedBatch(
+            want=jnp.arange(b) < n,
+            is_write=jnp.asarray(np.asarray(
+                [r.kind == "write" for r in reqs] + [False] * pad)),
+            volume=ints([r.volume for r in reqs]),
+            page=ints([r.page for r in reqs]),
+            block=ints([r.block for r in reqs]),
+            payload=payload,
+            queue=ints([r.req_id % len(self.queues) for r in reqs]),
+            step=jnp.int32(self.step),
+        )
+        self.step += 1
+        return reqs, batch
+
+    def poll_batch(self) -> Tuple[jnp.ndarray, List[Request]]:
+        """Drain up to ``batch`` requests round-robin across queues and admit
+        them in ONE device op. Returns (slot_ids (k,), requests)."""
+        reqs = self._drain(self.batch)
         if not reqs:
             return jnp.zeros((0,), jnp.int32), []
         # fixed-shape admission (pad to the batch size): one compiled program

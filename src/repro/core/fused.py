@@ -1,0 +1,148 @@
+"""The fused device-resident engine step (see docs/ARCHITECTURE.md).
+
+The paper removes per-request host hops from Longhorn's I/O path three ways:
+a multi-queue ublk frontend, the restructured slot-array protocol, and the
+direct-to-disk DBS store. ``engine.Engine`` reproduces each layer, but its
+``pump()`` still crosses the host *between* layers every batch: slot ids are
+``device_get``'d out of admission, and the write path dispatches separate
+jitted programs for control-plane resolution, CoW data movement, and reads.
+
+``fused_step`` is the jax analogue of fusing the whole protocol: ONE compiled
+program per batch geometry performs
+
+    slot admission  ->  write_pages control-plane resolution (per replica)
+                    ->  CoW extent copies (Pallas ``dbs_copy`` kernel)
+                    ->  payload stores, mirrored across all replicas
+                    ->  round-robin read gathers
+                    ->  slot retirement
+
+with no intermediate ``device_get``. The host's only jobs are moving raw
+request arrays in (``MultiQueueFrontend.drain_batch``) and completed
+payloads out (one ``device_get`` at completion). Admission state — the
+``SlotTable``, every replica ``DBSState``, and the payload pools — stays on
+device across ``pump()`` iterations.
+
+The unfused multi-call path survives as the ladder's ``comm="slots"``
+baseline; the benchmark column ``+fused`` measures exactly this change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dbs, slots
+from repro.kernels.dbs_copy.ops import dbs_copy_pool
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FusedBatch:
+    """Fixed-shape admitted-request batch: the raw arrays the host moves in.
+
+    All lane arrays are (B,) with inert padding lanes marked want=False, so
+    one program compiles per (B, payload) geometry regardless of how many
+    requests actually arrived — the Messages-Array idiom end to end.
+    """
+    want: jnp.ndarray       # (B,) bool  lane carries a real request
+    is_write: jnp.ndarray   # (B,) bool  write (True) vs read (False)
+    volume: jnp.ndarray     # (B,) int32
+    page: jnp.ndarray       # (B,) int32
+    block: jnp.ndarray      # (B,) int32 block offset within the page
+    payload: jnp.ndarray    # (B, *payload) write payloads (zeros for reads)
+    queue: jnp.ndarray      # (B,) int32 admission queue per lane
+    step: jnp.ndarray       # ()   int32 admission step (fairness/arrival)
+
+
+def _cow_apply(pool, ops: dbs.WriteOps, payload, block_offsets, cow: str):
+    """Data plane of a mirrored write batch: CoW extent copies then payload
+    block stores. ``cow="pallas"`` routes the extent copies through the
+    ``dbs_copy`` kernel (interpret-mode off-TPU); ``cow="ref"`` keeps the
+    gather/scatter ``apply_write_ops`` oracle as the reference path."""
+    if cow == "ref":
+        return dbs.apply_write_ops(pool, ops, payload, block_offsets)
+    # write_pages guarantees cow_src>=0 implies ok, but gate on ok anyway so
+    # a hostile ops batch can never route a copy through a clamped dst.
+    # scratch=True: ReplicaGroup pools carry one extra extent row past the
+    # allocator's range as the masked-lane dump, so the kernel stays aliased
+    # (no concat/slice copies of the pool).
+    pool = dbs_copy_pool(pool, ops.cow_src, ops.dst,
+                         (ops.cow_src >= 0) & ops.ok, scratch=True)
+    # payload store (identical to apply_write_ops' second half): not-ok
+    # lanes scatter out of bounds and are dropped — see the write_pages note
+    drop_dst = jnp.where(ops.ok, jnp.maximum(ops.dst, 0), pool.shape[0])
+    return pool.at[drop_dst, block_offsets].set(payload, mode="drop")
+
+
+@partial(jax.jit, static_argnames=("null_backend", "null_storage", "cow"))
+def fused_step(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
+               pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+               rr: jnp.ndarray, *, null_backend: bool = False,
+               null_storage: bool = False, cow: str = "pallas"):
+    """One whole controller iteration as a single compiled program.
+
+    states/pools: one entry per healthy replica (writes are mirrored to all
+    of them; reads gather from replica ``rr % R``). With ``null_storage``
+    the pools are untouched — pass ``pools=()`` so the (large) payload
+    arrays never enter the program at all. Returns
+    ``(table', states', pools', ok (B,) bool, reads (B, *payload))`` —
+    ``ok`` marks lanes that were admitted (and therefore completed), and
+    ``reads`` carries gathered payloads on read lanes, zeros elsewhere.
+    """
+    table, ids, ok = slots.transact(table, batch.want, batch.volume,
+                                    batch.queue, batch.step)
+    reads = jnp.zeros_like(batch.payload)
+    if null_backend or not states:
+        return table, states, pools, ok, reads
+
+    wmask = ok & batch.is_write
+    bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
+    out_states, out_pools = [], []
+    for i, st in enumerate(states):            # mirrored write-to-all
+        st, wops = dbs.write_pages(st, batch.volume, batch.page, bits, wmask)
+        if not null_storage:
+            out_pools.append(_cow_apply(pools[i], wops, batch.payload,
+                                        batch.block, cow))
+        out_states.append(st)
+
+    if not null_storage:
+        reads = _rr_gather(out_states, out_pools, batch, rr,
+                           ok & ~batch.is_write, reads)
+    return table, tuple(out_states), tuple(out_pools), ok, reads
+
+
+def _rr_gather(states, pools, batch, rr, rmask, reads):
+    """Round-robin read: resolve + gather from replica ``rr % R``."""
+    def _read_from(i):
+        def branch(_):
+            ext = dbs.read_resolve(states[i], batch.volume, batch.page)
+            return pools[i][jnp.maximum(ext, 0), batch.block]
+        return branch
+    vals = jax.lax.switch(rr % len(states),
+                          [_read_from(i) for i in range(len(states))], 0)
+    return jnp.where(rmask.reshape(rmask.shape + (1,) * (vals.ndim - 1)),
+                     vals, reads)
+
+
+@partial(jax.jit, static_argnames=("null_backend", "null_storage"))
+def fused_step_read(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
+                    pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+                    rr: jnp.ndarray, *, null_backend: bool = False,
+                    null_storage: bool = False):
+    """``fused_step`` specialised to batches with no write lanes.
+
+    Replica state and pools are read-only here, so they are inputs only —
+    returning them would force XLA to materialise pass-through copies of
+    the (large) pools every batch, which is exactly the cost the unfused
+    read path never pays. Returns ``(table', ok, reads)``.
+    """
+    table, ids, ok = slots.transact(table, batch.want, batch.volume,
+                                    batch.queue, batch.step)
+    reads = jnp.zeros_like(batch.payload)
+    if null_backend or null_storage or not states:
+        return table, ok, reads
+    return table, ok, _rr_gather(states, pools, batch, rr,
+                                 ok & ~batch.is_write, reads)

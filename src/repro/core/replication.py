@@ -14,6 +14,11 @@ Two planes:
 - **mesh collectives** (`mirror_write` / `rr_select`): the same write-to-all /
   read-one pattern expressed inside shard_map for the multi-pod data plane
   (gradient mirroring across "pod", page stripes across "model").
+
+The fused engine step (core/fused.py) threads the replica pytrees exposed
+by ``device_state``/``set_device_state`` through one compiled program —
+mirroring and round-robin selection then happen inside that program. See
+docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -55,10 +60,15 @@ class ReplicaGroup:
                  dtype=jnp.float32, null_storage: bool = False):
         self.null_storage = null_storage
         self.page_blocks = page_blocks
+        # pools carry ONE extra extent row past the allocator's range: the
+        # fused CoW kernel's masked-lane dump (dbs_copy_pool scratch=True),
+        # which keeps the kernel input/output-aliased with no pool copies.
+        # dbs.make_state only ever hands out extents < n_extents.
         self.replicas: List[Replica] = [
             Replica(state=dbs.make_state(n_extents, max_volumes, max_pages),
-                    pool=jnp.zeros((n_extents, page_blocks) + tuple(payload_shape),
-                                   dtype))
+                    pool=jnp.zeros(
+                        (n_extents + 1, page_blocks) + tuple(payload_shape),
+                        dtype))
             for _ in range(n_replicas)]
         self._rr = 0
 
@@ -85,6 +95,37 @@ class ReplicaGroup:
 
     def delete_volume(self, vol: int) -> None:
         self._all(lambda s: (dbs.delete_volume(s, jnp.int32(vol)), None))
+
+    # -- fused data plane (core/fused.py) ------------------------------------
+    def healthy_indices(self) -> List[int]:
+        return [i for i, r in enumerate(self.replicas) if r.healthy]
+
+    def device_state(self):
+        """(states, pools) tuples for every healthy replica — the pytrees the
+        fused engine step threads through one compiled program. Nothing is
+        fetched: these are device-resident arrays. With ``null_storage`` the
+        pools are withheld (fused_step never touches them)."""
+        idx = self.healthy_indices()
+        states = tuple(self.replicas[i].state for i in idx)
+        if self.null_storage:
+            return states, ()
+        return states, tuple(self.replicas[i].pool for i in idx)
+
+    def set_device_state(self, states, pools) -> None:
+        """Write back the fused step's outputs (healthy replicas, in the
+        order ``device_state`` returned them)."""
+        idx = self.healthy_indices()
+        for i, st in zip(idx, states):
+            self.replicas[i].state = st
+        for i, pool in zip(idx, pools):
+            self.replicas[i].pool = pool
+
+    def bump_rr(self) -> int:
+        """Advance and return the round-robin read cursor (shared with the
+        unfused ``read`` path so interleaving the two stays fair)."""
+        rr = self._rr
+        self._rr += 1
+        return rr
 
     # -- data plane ----------------------------------------------------------
     def write(self, vol, pages: jnp.ndarray, block_offsets: jnp.ndarray,

@@ -16,6 +16,9 @@ device-side translation is direct:
 
 Acquire/release are vectorized: a batch of k tokens moves with two scatter/
 gather ops, the JAX analogue of "each thread pops its own token".
+
+Lifecycles: ``admit``/``retire`` bracket the unfused engine iteration;
+``transact`` is the fused one (docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -104,8 +107,12 @@ def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
           queues: jnp.ndarray, step: jnp.ndarray):
     """Admit up to len(want) requests. Returns (table', slot_ids, ok)."""
     ring, ids, ok = acquire(table.ring, want.shape[0], want)
-    safe = jnp.where(ok, ids, 0)
-    upd = lambda a, v: a.at[safe].set(jnp.where(ok, v, a[safe]))
+    # not-admitted lanes scatter out of bounds and are dropped: clamping them
+    # to slot 0 would race a lane that legitimately acquired slot 0 (scatter
+    # order over duplicate indices is undefined).
+    idx = jnp.where(ok, ids, table.active.shape[0])
+    upd = lambda a, v: a.at[idx].set(
+        jnp.broadcast_to(v, idx.shape).astype(a.dtype), mode="drop")
     return dataclasses.replace(
         table, ring=ring,
         active=upd(table.active, True),
@@ -120,7 +127,22 @@ def retire(table: SlotTable, ids: jnp.ndarray, mask=None) -> SlotTable:
     ok = ids >= 0
     if mask is not None:
         ok = ok & mask
-    safe = jnp.where(ok, ids, 0)
-    active = table.active.at[safe].set(jnp.where(ok, False, table.active[safe]))
+    idx = jnp.where(ok, ids, table.active.shape[0])
+    active = table.active.at[idx].set(False, mode="drop")
     return dataclasses.replace(table, ring=release(table.ring, ids, mask),
                                active=active)
+
+
+def transact(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
+             queues: jnp.ndarray, step: jnp.ndarray):
+    """Admit a batch and immediately retire the admitted slots — the fused
+    engine's slot lifecycle (see core/fused.py and docs/ARCHITECTURE.md),
+    where a request is admitted, executed, and completed inside ONE compiled
+    step, so its token never outlives the program that acquired it.
+
+    The table still round-trips through the ring (arrival accounting is
+    recorded, starvation behaviour matches the unfused admit/retire pair),
+    but no slot id ever crosses to the host. Returns (table', slot_ids, ok).
+    """
+    table, ids, ok = admit(table, want, volumes, queues, step)
+    return retire(table, ids, ok), ids, ok

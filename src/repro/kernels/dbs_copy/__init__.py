@@ -1,1 +1,2 @@
-from repro.kernels.dbs_copy.ops import dbs_copy, dbs_copy_reference  # noqa: F401
+from repro.kernels.dbs_copy.ops import (dbs_copy, dbs_copy_pool,  # noqa: F401
+                                        dbs_copy_reference)
