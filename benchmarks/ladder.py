@@ -9,12 +9,24 @@ Columns (cumulative, mirroring Tables I/II — see docs/ARCHITECTURE.md):
                 mirrored stores, reads and retirement in ONE compiled
                 program per batch — no host hop between admission and
                 completion
+  +sharded      EnginePool (core/sharded.py): S engine shards served by ONE
+                vmapped fused step per pump, volumes hashed across shards,
+                pipelined (double-buffered) completion
 
 Rows (layer cuts): frontend-only (null backend) / without-storage (null
 storage) / full engine.
+
+Also a CLI (the CI bench-smoke job): ``python -m benchmarks.ladder --smoke
+--out BENCH.json --check`` runs a tiny-geometry ladder, writes the JSON
+artifact, and exits non-zero if the ``+fused``/``+sharded`` columns fall
+below the device-resident ``+dbs`` baseline on any row (see
+``check_no_regression`` for why upstream is not the CPU-smoke floor).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
@@ -24,13 +36,14 @@ import numpy as np
 
 from repro.core import Engine, EngineConfig, Request, UpstreamEngine
 
-COLUMNS = ("upstream", "+frontend", "+comm", "+dbs", "+fused")
+COLUMNS = ("upstream", "+frontend", "+comm", "+dbs", "+fused", "+sharded")
 ROWS = ("frontend_only", "without_storage", "full_engine")
 
 
 def make_engine(column: str, row: str, *, payload_shape=(64,),
                 n_replicas: int = 2, page_blocks: int = 32,
-                n_extents: int = 4096, max_pages: int = 1024):
+                n_extents: int = 4096, max_pages: int = 1024,
+                n_shards: int = 4):
     null_backend = row == "frontend_only"
     null_storage = row == "without_storage"
     kw = dict(payload_shape=payload_shape, n_replicas=n_replicas,
@@ -47,56 +60,71 @@ def make_engine(column: str, row: str, *, payload_shape=(64,),
         return Engine(EngineConfig(storage="dbs", comm="slots", **kw))
     if column == "+fused":
         return Engine(EngineConfig(storage="dbs", comm="fused", **kw))
+    if column == "+sharded":
+        return Engine(EngineConfig(storage="dbs", comm="sharded",
+                                   n_shards=n_shards, **kw))
     raise ValueError(column)
+
+
+def measure_engine(eng, *, n_requests: int, kind: str, pages: int,
+                   n_volumes: int, payload: jnp.ndarray,
+                   warmup: bool = True) -> float:
+    """One timed steady-state drain -> ops/s. The single measurement
+    protocol shared by the ladder columns and table3's shard sweep.
+
+    ``warmup`` drains one full write batch and one read batch before the
+    timed run so every batch-geometry program (including the read-only
+    step variant) compiles outside the clock — the paper's fio numbers are
+    steady-state too. The workload spreads requests round-robin over
+    ``n_volumes`` volumes (a multi-tenant stream; on a sharded engine the
+    volumes additionally hash across shards)."""
+    vols = [eng.create_volume() for _ in range(n_volumes)]
+    rng = np.random.default_rng(0)
+    page_seq = rng.integers(0, pages, size=n_requests)
+    if warmup:
+        cap = getattr(eng.cfg, "batch", 64)
+        for i in range(cap):
+            eng.submit(Request(req_id=i, kind="write",
+                               volume=vols[i % n_volumes],
+                               page=i % pages, block=i % 8, payload=payload))
+        for i in range(cap):
+            eng.submit(Request(req_id=cap + i, kind="read",
+                               volume=vols[i % n_volumes],
+                               page=i % pages, block=i % 8))
+        eng.drain()
+        eng.completed = 0
+    for i in range(n_requests):
+        k = ("write" if (kind == "write" or (kind == "mixed" and i % 2))
+             else "read")
+        eng.submit(Request(req_id=i, kind=k, volume=vols[i % n_volumes],
+                           page=int(page_seq[i]), block=i % 8,
+                           payload=payload))
+    t0 = time.perf_counter()
+    done = eng.drain()
+    dt = time.perf_counter() - t0
+    assert done == n_requests, (done, n_requests)
+    return n_requests / dt
 
 
 def run_ladder(*, n_requests: int = 512, payload_elems: int = 64,
                kind: str = "mixed", pages: int = 256,
-               repeats: int = 1, warmup: bool = True
+               repeats: int = 1, warmup: bool = True,
+               n_volumes: int = 4, n_shards: int = 4
                ) -> Dict[str, Dict[str, float]]:
-    """Returns ops/sec for every (column, row) cell.
-
-    ``warmup`` drains one full write batch and one read batch before the
-    timed run so every column is measured steady-state (jit compilation of
-    the batch-geometry programs happens once, outside the clock) — the
-    paper's fio numbers are steady-state too.
-    """
+    """Returns best-of-``repeats`` ops/sec for every (column, row) cell
+    (see ``measure_engine`` for the per-cell protocol)."""
     payload = jnp.ones((payload_elems,), jnp.float32)
     out: Dict[str, Dict[str, float]] = {}
-    rng = np.random.default_rng(0)
-    page_seq = rng.integers(0, pages, size=n_requests)
     for col in COLUMNS:
         out[col] = {}
         for row in ROWS:
-            best = 0.0
-            for _ in range(repeats):
-                eng = make_engine(col, row, payload_shape=(payload_elems,),
-                                  max_pages=pages)
-                vol = eng.create_volume()
-                if warmup:
-                    cap = getattr(eng.cfg, "batch", 64)
-                    for i in range(cap):
-                        eng.submit(Request(req_id=i, kind="write", volume=vol,
-                                           page=i % pages, block=i % 8,
-                                           payload=payload))
-                    for i in range(cap):
-                        eng.submit(Request(req_id=cap + i, kind="read",
-                                           volume=vol, page=i % pages,
-                                           block=i % 8))
-                    eng.drain()
-                    eng.completed = 0
-                for i in range(n_requests):
-                    k = ("write" if (kind == "write" or
-                                     (kind == "mixed" and i % 2)) else "read")
-                    eng.submit(Request(req_id=i, kind=k, volume=vol,
-                                       page=int(page_seq[i]),
-                                       block=i % 8, payload=payload))
-                t0 = time.perf_counter()
-                done = eng.drain()
-                dt = time.perf_counter() - t0
-                assert done == n_requests, (col, row, done)
-                best = max(best, n_requests / dt)
-            out[col][row] = best
+            out[col][row] = max(
+                measure_engine(
+                    make_engine(col, row, payload_shape=(payload_elems,),
+                                max_pages=pages, n_shards=n_shards),
+                    n_requests=n_requests, kind=kind, pages=pages,
+                    n_volumes=n_volumes, payload=payload, warmup=warmup)
+                for _ in range(repeats))
     return out
 
 
@@ -146,3 +174,86 @@ def snapshot_degradation(*, n_snapshots=(0, 4, 16, 64), n_reads: int = 256,
             res[key].append({"snapshots": ns, "ops_per_s": done / dt,
                              "layers_per_read": depth})
     return res
+
+
+# ---------------------------------------------------------------------------
+# CLI — the CI bench-smoke job (and quick local runs)
+# ---------------------------------------------------------------------------
+# repeats=3 (best-of): shared CI runners inject multi-ms scheduling spikes;
+# max-over-repeats recovers the machine-limited number per cell
+SMOKE = dict(n_requests=512, payload_elems=16, pages=64, n_volumes=8,
+             n_shards=4, repeats=3)
+
+
+def check_no_regression(ladder: Dict[str, Dict[str, float]],
+                        columns=("+fused", "+sharded"),
+                        baseline: str = "+dbs",
+                        floor: float = 0.7) -> List[str]:
+    """The fused/sharded columns must not collapse below the device-resident
+    baseline column (``+dbs``, the pre-fused engine) on any row — the floor
+    the CI bench job enforces per run.
+
+    Why not the ``upstream`` column: at smoke geometry on a CPU runner the
+    upstream baseline is a pure-Python dict loop with no device dispatch at
+    all, so it outruns every device-resident column by construction (there
+    is no real storage medium to dominate the clock, the situation the
+    paper measures). Regressions in the columns this repo *adds* show up as
+    losing to ``+dbs`` within one run; ``floor`` leaves margin for shared-
+    runner noise (cross-run absolute numbers are meaningless there).
+    """
+    problems = []
+    for col in columns:
+        for row, ops in ladder.get(col, {}).items():
+            base = ladder[baseline][row] * floor
+            if ops < base:
+                problems.append(
+                    f"{col}/{row}: {ops:.0f} ops/s < {floor:g}x "
+                    f"{baseline} ({ladder[baseline][row]:.0f} ops/s)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry (CI per-PR run)")
+    ap.add_argument("--kind", default="mixed",
+                    choices=("mixed", "read", "write"))
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the ladder as JSON (the CI artifact)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if +fused/+sharded regress below the "
+                         "+dbs baseline (see check_no_regression)")
+    args = ap.parse_args(argv)
+
+    kw = dict(SMOKE) if args.smoke else {}
+    if args.n_requests is not None:
+        kw["n_requests"] = args.n_requests
+    ladder = run_ladder(kind=args.kind, **kw)
+
+    width = max(len(c) for c in COLUMNS) + 2
+    print("row".ljust(18) + "".join(c.rjust(width) for c in COLUMNS))
+    for row in ROWS:
+        cells = "".join(f"{ladder[c][row]:{width}.0f}" for c in COLUMNS)
+        print(row.ljust(18) + cells + "   ops/s")
+
+    if args.out:
+        doc = {"bench": "ladder", "kind": args.kind,
+               "smoke": bool(args.smoke), "params": kw,
+               "columns": list(COLUMNS), "rows": list(ROWS),
+               "ops_per_s": ladder}
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.out}")
+
+    if args.check:
+        problems = check_no_regression(ladder)
+        if problems:
+            print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
+            return 1
+        print("check OK: +fused/+sharded hold the +dbs floor on every row")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Table III (this repo's extension): aggregate throughput vs shard count.
+
+The paper's Tables I/II isolate per-layer wins for ONE engine instance;
+this table measures the scale axis core/sharded.py adds: the same
+multi-volume request stream served by an ``EnginePool`` with S ∈ {1,2,4,8}
+engine shards, against the single-engine ``+fused`` column as baseline.
+Every configuration serves the identical workload (``n_volumes`` volumes,
+requests round-robin across them), so the S-axis shows pure dispatch
+amortization + host/device overlap: one vmapped program per pump serves
+all S shards, and the pipelined drain overlaps completion readback with
+the next admission.
+
+Expected shape (pinned loosely by ``--check``, used in CI smoke): S=1
+matches ``+fused`` within noise (vmap over one shard + double-buffering is
+not a cost), and aggregate ops/s grows with S up to ~4 as per-pump fixed
+costs spread over S shards' batches.
+
+CLI: ``python -m benchmarks.table3_shards --smoke --out BENCH.json --check``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterable, List
+
+import jax.numpy as jnp
+
+from benchmarks.ladder import make_engine, measure_engine
+
+SHARDS = (1, 2, 4, 8)
+
+
+def run_table3(*, shards: Iterable[int] = SHARDS, n_requests: int = 1024,
+               payload_elems: int = 16, pages: int = 64, n_volumes: int = 8,
+               kind: str = "mixed", repeats: int = 3) -> Dict[str, object]:
+    """Best-of-``repeats`` ops/s per configuration (the ladder's
+    ``measure_engine`` protocol): shared runners inject multi-ms scheduling
+    spikes, and max-over-repeats recovers the machine-limited number (jit
+    compiles once on the first repeat)."""
+    payload = jnp.ones((payload_elems,), jnp.float32)
+    kw = dict(n_requests=n_requests, n_volumes=n_volumes, pages=pages,
+              payload=payload, kind=kind)
+
+    def best(make):
+        return max(measure_engine(make(), **kw) for _ in range(repeats))
+
+    fused = best(lambda: make_engine("+fused", "full_engine",
+                                     payload_shape=(payload_elems,),
+                                     max_pages=pages))
+    sharded: Dict[int, float] = {}
+    for s in shards:
+        sharded[s] = best(lambda: make_engine(
+            "+sharded", "full_engine", payload_shape=(payload_elems,),
+            max_pages=pages, n_shards=s))
+    return {"+fused": fused, "+sharded": sharded}
+
+
+def check_scaling(res: Dict[str, object], *, floor: float = 0.7,
+                  upto: int = 4) -> List[str]:
+    """S=1 must match the single fused engine within noise, and aggregate
+    throughput must not *lose* ground as shards are added up to ``upto``
+    (monotone within the noise floor — shared runners are jittery, so the
+    gate is a ratio, not strict monotonicity)."""
+    problems = []
+    sharded: Dict[int, float] = res["+sharded"]
+    if 1 in sharded and sharded[1] < res["+fused"] * floor:
+        problems.append(f"+sharded S=1 ({sharded[1]:.0f} ops/s) < {floor:g}x "
+                        f"+fused ({res['+fused']:.0f} ops/s)")
+    ss = sorted(s for s in sharded if s <= upto)
+    for lo, hi in zip(ss, ss[1:]):
+        if sharded[hi] < sharded[lo] * floor:
+            problems.append(f"+sharded S={hi} ({sharded[hi]:.0f} ops/s) < "
+                            f"{floor:g}x S={lo} ({sharded[lo]:.0f} ops/s)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry + S<=4 (CI per-PR run)")
+    ap.add_argument("--kind", default="mixed",
+                    choices=("mixed", "read", "write"))
+    ap.add_argument("--out", default=None, help="write JSON (CI artifact)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if sharding loses to the fused baseline "
+                         "or to fewer shards (see check_scaling)")
+    args = ap.parse_args(argv)
+
+    kw = (dict(shards=(1, 2, 4), n_requests=512) if args.smoke
+          else dict(shards=SHARDS))
+    res = run_table3(kind=args.kind, **kw)
+
+    print(f"{'config':<14}{'ops/s':>12}")
+    print(f"{'+fused':<14}{res['+fused']:>12.0f}")
+    for s, ops in sorted(res["+sharded"].items()):
+        print(f"{'+sharded S=' + str(s):<14}{ops:>12.0f}")
+
+    if args.out:
+        doc = {"bench": "table3_shards", "kind": args.kind,
+               "smoke": bool(args.smoke), "params": {
+                   k: v for k, v in kw.items() if k != "shards"},
+               "shards": list(kw["shards"]), "ops_per_s": {
+                   "+fused": res["+fused"],
+                   "+sharded": {str(s): v
+                                for s, v in res["+sharded"].items()}}}
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.out}")
+
+    if args.check:
+        problems = check_scaling(res)
+        if problems:
+            print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
+            return 1
+        print("check OK: sharding holds the fused floor and scales")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,10 +42,12 @@ class EngineConfig:
     storage: str = "dbs"         # dbs | chained (sparse-file-style baseline)
     comm: str = "slots"          # slots (Messages Array) | loop (per-request)
                                  # | fused (single-program step, core/fused.py)
-    cow: str = "auto"            # CoW data plane for comm="fused":
+                                 # | sharded (vmapped EnginePool, core/sharded.py)
+    cow: str = "auto"            # CoW data plane for comm="fused"/"sharded":
                                  # auto (pallas on TPU, ref elsewhere)
                                  # | pallas (force the dbs_copy kernel)
                                  # | ref (apply_write_ops gather/scatter)
+    n_shards: int = 1            # engine shards for comm="sharded"
 
 
 class Engine:
@@ -59,11 +61,20 @@ class Engine:
 
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg
-        if cfg.comm == "fused" and cfg.storage != "dbs":
-            raise ValueError("comm='fused' requires storage='dbs'")
+        if cfg.comm in ("fused", "sharded") and cfg.storage != "dbs":
+            raise ValueError(f"comm={cfg.comm!r} requires storage='dbs'")
         if cfg.cow not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown cow impl {cfg.cow!r} "
                              "(expected auto | pallas | ref)")
+        if cfg.comm == "sharded":
+            # the whole engine is the pool: S shards, one vmapped step
+            from repro.core.sharded import EnginePool
+            self.pool = EnginePool(cfg)
+            self.frontend = self.pool.frontend
+            self.backend = self.pool.backend
+            self._cow = self.pool._cow
+            return
+        self.pool = None
         self.frontend = MultiQueueFrontend(cfg.n_queues, cfg.n_slots, cfg.batch)
         if cfg.null_backend:
             self.backend = None
@@ -78,13 +89,28 @@ class Engine:
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
         self.completed = 0
 
+    @property
+    def completed(self) -> int:
+        return self.pool.completed if self.pool is not None else self._completed
+
+    @completed.setter
+    def completed(self, v: int) -> None:
+        if self.pool is not None:
+            self.pool.completed = v
+        else:
+            self._completed = v
+
     def create_volume(self) -> int:
+        if self.pool is not None:
+            return self.pool.create_volume()
         if self.backend is None:
             return 0
         return self.backend.create_volume()
 
     def snapshot(self, vol: int) -> None:
-        if self.backend is not None:
+        if self.pool is not None:
+            self.pool.snapshot(vol)
+        elif self.backend is not None:
             self.backend.snapshot(vol)
 
     def submit(self, req: Request) -> None:
@@ -162,6 +188,8 @@ class Engine:
         """One controller iteration: admit a batch, execute it against the
         replicas (writes mirrored / reads round-robin), complete the slots.
         Returns the number of completed requests."""
+        if self.pool is not None:
+            return self.pool.pump()
         if self.cfg.comm == "fused":
             return self._pump_fused()
         slot_ids, reqs = self.frontend.poll_batch()
@@ -205,6 +233,8 @@ class Engine:
         return len(done)
 
     def drain(self, max_iters: int = 100_000) -> int:
+        if self.pool is not None:
+            return self.pool.drain(max_iters)     # pipelined double-buffer
         n = 0
         for _ in range(max_iters):
             got = self.pump()

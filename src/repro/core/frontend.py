@@ -13,6 +13,9 @@ analogue is request admission into the compiled engine:
   slot count, no per-request host hop. Two drain paths: ``poll_batch`` (the
   unfused ``comm="slots"`` engine) and ``drain_batch`` (raw arrays for the
   fused step — admission state never leaves the device).
+- ``ShardedFrontend``: S multi-queue frontends (volume-hashed) whose slot
+  tables live as one shard-major stacked table; ``drain_sharded`` feeds the
+  vmapped EnginePool step (core/sharded.py) one (S, B, ...) batch.
 
 See docs/ARCHITECTURE.md for where the frontend sits in the pipeline.
 """
@@ -73,12 +76,19 @@ class UpstreamFrontend:
 
 
 class MultiQueueFrontend:
-    """N admission queues + batched slot admission (paper Fig. 4 right)."""
+    """N admission queues + batched slot admission (paper Fig. 4 right).
 
-    def __init__(self, n_queues: int, n_slots: int, batch: int = 64):
+    ``with_table=False`` builds only the host-side admission rings — the
+    ShardedFrontend composes S of these but keeps the single authoritative
+    stacked slot table itself (a per-shard table here would be dead state
+    that ``poll_batch`` could silently diverge against).
+    """
+
+    def __init__(self, n_queues: int, n_slots: int, batch: int = 64,
+                 with_table: bool = True):
         self.queues: List[Deque[Request]] = [collections.deque()
                                              for _ in range(n_queues)]
-        self.table = slots.make_table(n_slots)
+        self.table = slots.make_table(n_slots) if with_table else None
         self.batch = batch
         self.step = 0
         self._by_slot: Dict[int, Request] = {}
@@ -121,10 +131,13 @@ class MultiQueueFrontend:
         n, b = len(reqs), self.batch
         pad = b - n
         ints = lambda xs: jnp.asarray(np.asarray(xs + [0] * pad, np.int32))
-        zero = jnp.zeros(payload_shape, jnp.float32)
-        payload = jnp.stack(
-            [r.payload if r.payload is not None else zero for r in reqs]
-            + [zero] * pad)
+        # fill a host-side numpy buffer, ONE device transfer for the batch
+        # (a per-request jnp.stack puts O(B) tiny dispatches on the pump)
+        np_payload = np.zeros((b,) + tuple(payload_shape), np.float32)
+        for i, r in enumerate(reqs):
+            if r.payload is not None:
+                np_payload[i] = np.asarray(r.payload)
+        payload = jnp.asarray(np_payload)
         batch = FusedBatch(
             want=jnp.arange(b) < n,
             is_write=jnp.asarray(np.asarray(
@@ -176,3 +189,89 @@ class MultiQueueFrontend:
             if int(sid) >= 0 and int(sid) in self._by_slot:
                 out.append(self._by_slot.pop(int(sid)))
         return out
+
+
+class ShardedFrontend:
+    """S multi-queue frontends feeding ONE vmapped admission program.
+
+    Requests hash to a shard by volume id (``volume % S`` — a volume lives
+    entirely on one shard, like a Longhorn volume on its engine instance).
+    Each shard keeps its own host-side admission rings, but the S slot
+    tables are held as a single shard-major stacked ``SlotTable``
+    (slots.make_sharded_table) so the EnginePool's vmapped step admits and
+    retires every shard's batch in one compiled program.
+
+    ``drain_sharded`` is the fused-path drain: it pulls up to ``batch``
+    requests per shard and stacks the raw per-shard arrays into one
+    (S, B, ...) ``FusedBatch``. Shards with no traffic contribute an inert
+    all-padding batch lane set — the program geometry never depends on which
+    shards happen to be busy. Volume ids are translated to the shard-local
+    ids the device-side DBS states use (``volume // S``).
+    """
+
+    def __init__(self, n_shards: int, n_queues: int, n_slots: int,
+                 batch: int = 64):
+        self.n_shards = n_shards
+        self.batch = batch
+        self.shards = [MultiQueueFrontend(n_queues, n_slots, batch,
+                                          with_table=False)
+                       for _ in range(n_shards)]
+        self.table = slots.make_sharded_table(n_shards, n_slots)
+
+    def shard_of(self, volume: int) -> int:
+        return volume % self.n_shards
+
+    def submit(self, req: Request) -> None:
+        self.shards[self.shard_of(req.volume)].submit(req)
+
+    def requeue(self, req: Request) -> None:
+        self.shards[self.shard_of(req.volume)].requeue(req)
+
+    def depth(self) -> int:
+        return sum(f.depth() for f in self.shards)
+
+    def drain_sharded(self, payload_shape: Tuple[int, ...] = ()
+                      ) -> Tuple[List[List[Request]], Optional[FusedBatch]]:
+        """Drain every shard into one stacked (S, B, ...) FusedBatch.
+
+        Returns (per-shard request lists, stacked batch) — batch is None
+        when no shard had traffic. Request lists line up with batch lanes:
+        shard s's request i rode lane (s, i); shards with no traffic
+        contribute all-inert (want=False) rows, so the program geometry
+        never depends on which shards are busy.
+
+        The lane arrays are filled into host-side numpy buffers and cross
+        to the device as ONE transfer per leaf — not one per shard per
+        field, which would put O(S) tiny dispatches on the exact pump path
+        the shard axis exists to amortize. Volume ids are translated to the
+        shard-local ids the device-side DBS states use (``volume // S``).
+        """
+        drained = [f._drain(self.batch) for f in self.shards]
+        if not any(drained):
+            return [], None
+        s_n, b_n = self.n_shards, self.batch
+        want = np.zeros((s_n, b_n), bool)
+        is_write = np.zeros((s_n, b_n), bool)
+        ints = {k: np.zeros((s_n, b_n), np.int32)
+                for k in ("volume", "page", "block", "queue")}
+        step = np.zeros((s_n,), np.int32)
+        payload = np.zeros((s_n, b_n) + tuple(payload_shape), np.float32)
+        for s, (f, reqs) in enumerate(zip(self.shards, drained)):
+            step[s] = f.step
+            if reqs:
+                f.step += 1
+            for i, r in enumerate(reqs):
+                want[s, i] = True
+                is_write[s, i] = r.kind == "write"
+                ints["volume"][s, i] = r.volume // s_n
+                ints["page"][s, i] = r.page
+                ints["block"][s, i] = r.block
+                ints["queue"][s, i] = r.req_id % len(f.queues)
+                if r.payload is not None:
+                    payload[s, i] = np.asarray(r.payload)
+        batch = FusedBatch(
+            want=jnp.asarray(want), is_write=jnp.asarray(is_write),
+            volume=jnp.asarray(ints["volume"]), page=jnp.asarray(ints["page"]),
+            block=jnp.asarray(ints["block"]), payload=jnp.asarray(payload),
+            queue=jnp.asarray(ints["queue"]), step=jnp.asarray(step))
+        return drained, batch

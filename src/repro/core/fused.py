@@ -24,6 +24,14 @@ device across ``pump()`` iterations.
 
 The unfused multi-call path survives as the ladder's ``comm="slots"``
 baseline; the benchmark column ``+fused`` measures exactly this change.
+
+``step_core``/``step_core_read`` are the un-jitted bodies, written to be
+``jax.vmap``-safe over a leading *shard* axis (core/sharded.py stacks S
+independent engines and dispatches one vmapped program for all of them).
+Vmap-safety is why they take an optional **traced** ``healthy`` mask: under
+vmap the round-robin cursor and the per-replica health bits differ per
+shard, so replica selection cannot be a Python-level branch (the host-side
+filtering ``ReplicaGroup.device_state`` does for the single-engine path).
 """
 from __future__ import annotations
 
@@ -77,7 +85,44 @@ def _cow_apply(pool, ops: dbs.WriteOps, payload, block_offsets, cow: str):
     return pool.at[drop_dst, block_offsets].set(payload, mode="drop")
 
 
-@partial(jax.jit, static_argnames=("null_backend", "null_storage", "cow"))
+def step_core(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
+              pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+              rr: jnp.ndarray, healthy=None, *, null_backend: bool = False,
+              null_storage: bool = False, cow: str = "pallas"):
+    """The fused controller iteration, un-jitted (vmap-safe over shards).
+
+    ``healthy``: None for the single-engine path (the caller passes only
+    healthy replicas — ``ReplicaGroup.device_state``), or a traced (R,) bool
+    mask over a *fixed* replica tuple. With the mask, writes mirror only to
+    healthy replicas and reads round-robin over the healthy subset — the
+    form core/sharded.py vmaps, where health differs per shard and cannot
+    change the pytree structure.
+    """
+    table, ids, ok = slots.transact(table, batch.want, batch.volume,
+                                    batch.queue, batch.step)
+    reads = jnp.zeros_like(batch.payload)
+    if null_backend or not states:
+        return table, states, pools, ok, reads
+
+    wmask = ok & batch.is_write
+    bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
+    out_states, out_pools = [], []
+    for i, st in enumerate(states):            # mirrored write-to-all
+        m = wmask if healthy is None else wmask & healthy[i]
+        st, wops = dbs.write_pages(st, batch.volume, batch.page, bits, m)
+        if not null_storage:
+            out_pools.append(_cow_apply(pools[i], wops, batch.payload,
+                                        batch.block, cow))
+        out_states.append(st)
+
+    if not null_storage:
+        reads = _rr_gather(out_states, out_pools, batch, rr,
+                           ok & ~batch.is_write, reads, healthy)
+    return table, tuple(out_states), tuple(out_pools), ok, reads
+
+
+@partial(jax.jit, static_argnames=("null_backend", "null_storage", "cow"),
+         donate_argnums=(0, 1, 2))
 def fused_step(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
                pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
                rr: jnp.ndarray, *, null_backend: bool = False,
@@ -91,58 +136,80 @@ def fused_step(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
     ``(table', states', pools', ok (B,) bool, reads (B, *payload))`` —
     ``ok`` marks lanes that were admitted (and therefore completed), and
     ``reads`` carries gathered payloads on read lanes, zeros elsewhere.
+
+    The table, replica states and pools are DONATED: the engine replaces
+    its references with the returned pytrees every pump, so XLA updates the
+    (large) pools in place instead of copying them through each step —
+    callers must not touch the passed-in arrays afterwards.
     """
-    table, ids, ok = slots.transact(table, batch.want, batch.volume,
-                                    batch.queue, batch.step)
-    reads = jnp.zeros_like(batch.payload)
-    if null_backend or not states:
-        return table, states, pools, ok, reads
-
-    wmask = ok & batch.is_write
-    bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
-    out_states, out_pools = [], []
-    for i, st in enumerate(states):            # mirrored write-to-all
-        st, wops = dbs.write_pages(st, batch.volume, batch.page, bits, wmask)
-        if not null_storage:
-            out_pools.append(_cow_apply(pools[i], wops, batch.payload,
-                                        batch.block, cow))
-        out_states.append(st)
-
-    if not null_storage:
-        reads = _rr_gather(out_states, out_pools, batch, rr,
-                           ok & ~batch.is_write, reads)
-    return table, tuple(out_states), tuple(out_pools), ok, reads
+    return step_core(table, states, pools, batch, rr,
+                     null_backend=null_backend, null_storage=null_storage,
+                     cow=cow)
 
 
-def _rr_gather(states, pools, batch, rr, rmask, reads):
-    """Round-robin read: resolve + gather from replica ``rr % R``."""
-    def _read_from(i):
-        def branch(_):
+def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None):
+    """Round-robin read: resolve + gather from replica ``rr % R``.
+
+    ``healthy=None``: all replicas serve; ``lax.switch`` executes exactly one
+    branch (one resolve + one gather per batch — the cheap single-engine
+    form). With a traced ``healthy`` mask: reads come from the (rr mod H)-th
+    *healthy* replica, selected with a rank-compare one-hot — every replica
+    is gathered and the selection is a ``where`` chain, which is what makes
+    this form vmap-safe (and is no extra cost under vmap, where a batched
+    switch would execute all branches anyway).
+    """
+    if healthy is None:
+        def _read_from(i):
+            def branch(_):
+                ext = dbs.read_resolve(states[i], batch.volume, batch.page)
+                return pools[i][jnp.maximum(ext, 0), batch.block]
+            return branch
+        vals = jax.lax.switch(rr % len(states),
+                              [_read_from(i) for i in range(len(states))], 0)
+    else:
+        h = healthy.astype(jnp.int32)
+        target = rr % jnp.maximum(jnp.sum(h), 1)
+        sel = healthy & (jnp.cumsum(h) - 1 == target)    # (R,) one-hot
+        vals = jnp.zeros_like(reads)
+        for i in range(len(states)):
             ext = dbs.read_resolve(states[i], batch.volume, batch.page)
-            return pools[i][jnp.maximum(ext, 0), batch.block]
-        return branch
-    vals = jax.lax.switch(rr % len(states),
-                          [_read_from(i) for i in range(len(states))], 0)
+            vals = jnp.where(sel[i], pools[i][jnp.maximum(ext, 0),
+                                              batch.block], vals)
     return jnp.where(rmask.reshape(rmask.shape + (1,) * (vals.ndim - 1)),
                      vals, reads)
 
 
-@partial(jax.jit, static_argnames=("null_backend", "null_storage"))
-def fused_step_read(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
-                    pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
-                    rr: jnp.ndarray, *, null_backend: bool = False,
-                    null_storage: bool = False):
-    """``fused_step`` specialised to batches with no write lanes.
-
-    Replica state and pools are read-only here, so they are inputs only —
-    returning them would force XLA to materialise pass-through copies of
-    the (large) pools every batch, which is exactly the cost the unfused
-    read path never pays. Returns ``(table', ok, reads)``.
-    """
+def step_core_read(table: slots.SlotTable,
+                   states: Tuple[dbs.DBSState, ...],
+                   pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+                   rr: jnp.ndarray, healthy=None, *,
+                   null_backend: bool = False, null_storage: bool = False):
+    """``step_core`` specialised to batches with no write lanes (un-jitted,
+    vmap-safe; replica state and pools are inputs only)."""
     table, ids, ok = slots.transact(table, batch.want, batch.volume,
                                     batch.queue, batch.step)
     reads = jnp.zeros_like(batch.payload)
     if null_backend or null_storage or not states:
         return table, ok, reads
     return table, ok, _rr_gather(states, pools, batch, rr,
-                                 ok & ~batch.is_write, reads)
+                                 ok & ~batch.is_write, reads, healthy)
+
+
+@partial(jax.jit, static_argnames=("null_backend", "null_storage"),
+         donate_argnums=(0,))
+def fused_step_read(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
+                    pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+                    rr: jnp.ndarray, *, null_backend: bool = False,
+                    null_storage: bool = False):
+    """``fused_step`` specialised to batches with no write lanes.
+
+    Replica state and pools are read-only here, so they are inputs only
+    (and NOT donated — they stay live across read-only pumps) — returning
+    them would force XLA to materialise pass-through copies of the (large)
+    pools every batch, which is exactly the cost the unfused read path
+    never pays. Only the slot table is donated. Returns
+    ``(table', ok, reads)``.
+    """
+    return step_core_read(table, states, pools, batch, rr,
+                          null_backend=null_backend,
+                          null_storage=null_storage)

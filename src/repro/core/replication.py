@@ -17,8 +17,10 @@ Two planes:
 
 The fused engine step (core/fused.py) threads the replica pytrees exposed
 by ``device_state``/``set_device_state`` through one compiled program —
-mirroring and round-robin selection then happen inside that program. See
-docs/ARCHITECTURE.md.
+mirroring and round-robin selection then happen inside that program.
+``ShardedReplicaGroup`` stacks S such groups along a leading shard axis
+(dense per-shard health mask, device-resident rr cursors) for the vmapped
+pool step in core/sharded.py. See docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -28,6 +30,7 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dbs
 
@@ -154,8 +157,8 @@ class ReplicaGroup:
             r = self.replicas[i]
             if r.healthy:
                 if self.null_storage:
-                    ext = dbs.read_resolve(
-                        r.state, jnp.asarray(vol, jnp.int32), pages)
+                    # no resolve dispatch: with storage nulled the extent map
+                    # is never consulted, the ack is zeros of the right shape
                     return jnp.zeros((pages.shape[0],) + r.pool.shape[2:],
                                      r.pool.dtype)
                 return _read_jit(r.state, r.pool,
@@ -164,7 +167,22 @@ class ReplicaGroup:
         raise RuntimeError("no healthy replica")
 
     # -- fault handling ------------------------------------------------------
+    def _check_index(self, idx: int) -> None:
+        if not 0 <= idx < len(self.replicas):
+            raise IndexError(f"replica index {idx} out of range "
+                             f"[0, {len(self.replicas)})")
+
     def fail(self, idx: int) -> None:
+        """Mark a replica faulty. The controller never declares the LAST
+        healthy replica dead — that is volume loss, not failover — so a
+        group must keep one serving copy (paper §III: reads/writes continue
+        on the surviving replicas while the failed one rebuilds)."""
+        self._check_index(idx)
+        survivors = [r for i, r in enumerate(self.replicas)
+                     if r.healthy and i != idx]
+        if self.replicas[idx].healthy and not survivors:
+            raise RuntimeError(f"replica {idx} is the last healthy replica; "
+                               "failing it would lose the volume")
         self.replicas[idx].healthy = False
 
     def consistent(self) -> bool:
@@ -175,13 +193,187 @@ class ReplicaGroup:
     def rebuild(self, idx: int) -> None:
         """Restore a failed replica from the most up-to-date healthy copy
         (highest revision), then mark it healthy. Streams the full extent
-        pool + metadata — the engine-level rebuild of paper §III."""
-        donor = max((r for r in self.replicas if r.healthy),
-                    key=lambda r: int(jax.device_get(r.state.revision)))
+        pool + metadata — the engine-level rebuild of paper §III. Rebuilding
+        a replica the controller never marked faulty is a protocol error
+        (the paper's controller only schedules rebuilds for failed
+        replicas), as is naming a replica that doesn't exist."""
+        self._check_index(idx)
         tgt = self.replicas[idx]
+        if tgt.healthy:
+            raise ValueError(f"replica {idx} is healthy; only a failed "
+                             "replica can be rebuilt")
+        donors = [r for r in self.replicas if r.healthy]
+        if not donors:
+            raise RuntimeError("no healthy replica to rebuild from")
+        donor = max(donors,
+                    key=lambda r: int(jax.device_get(r.state.revision)))
         tgt.state = jax.tree.map(jnp.copy, donor.state)
         tgt.pool = jnp.copy(donor.pool)
         tgt.healthy = True
+
+
+# ---------------------------------------------------------------------------
+# sharded replica groups (the EnginePool backend, core/sharded.py)
+# ---------------------------------------------------------------------------
+class ShardedReplicaGroup:
+    """S independent replica groups stacked along a leading shard axis.
+
+    Each of R replicas is held as ONE pytree whose leaves carry a leading
+    (S,) dimension — shard ``s``'s replica ``r`` is ``states[r][s]`` — so the
+    vmapped engine step (core/sharded.py) serves every shard's mirrored
+    writes and round-robin reads in a single compiled program. Because vmap
+    cannot vary pytree *structure* per shard, replica health is a dense
+    (S, R) bool mask threaded through the step as a traced argument rather
+    than the host-side filtering ``ReplicaGroup.device_state`` does: a
+    failed replica's shard slice simply stops receiving writes and serving
+    reads until ``rebuild``.
+
+    The round-robin read cursors are a device-resident (S,) array bumped
+    with a device add — no host sync on the pump path.
+    """
+
+    def __init__(self, n_shards: int, n_replicas: int, n_extents: int,
+                 max_volumes: int, max_pages: int, page_blocks: int,
+                 payload_shape=(4,), dtype=jnp.float32,
+                 null_storage: bool = False):
+        self.n_shards = n_shards
+        self.n_replicas = n_replicas
+        self.null_storage = null_storage
+        self.page_blocks = page_blocks
+        stack = lambda x: jnp.tile(x[None], (n_shards,) + (1,) * x.ndim)
+        # one extra extent row per pool: the fused CoW kernel's masked-lane
+        # dump (same convention as ReplicaGroup)
+        self.states: List[dbs.DBSState] = [
+            jax.tree.map(stack, dbs.make_state(n_extents, max_volumes,
+                                               max_pages))
+            for _ in range(n_replicas)]
+        self.pools: List[jnp.ndarray] = [
+            jnp.zeros((n_shards, n_extents + 1, page_blocks)
+                      + tuple(payload_shape), dtype)
+            for _ in range(n_replicas)]
+        self.healthy = np.ones((n_shards, n_replicas), bool)
+        self._healthy_dev: Optional[jnp.ndarray] = None   # device-mask cache
+        self._rr = jnp.zeros((n_shards,), jnp.int32)
+
+    # -- control plane (host-side slice/write-back; rare ops) ----------------
+    def _shard_op(self, shard: int, fn):
+        """Apply ``fn(state) -> (state', out)`` to shard ``shard`` of every
+        replica (healthy or not: a failed replica is overwritten wholesale by
+        ``rebuild``, and keeping all R slices in lock-step means rebuild can
+        copy metadata without replaying control ops)."""
+        outs = []
+        for r in range(self.n_replicas):
+            st = jax.tree.map(lambda x: x[shard], self.states[r])
+            st, out = fn(st)
+            self.states[r] = jax.tree.map(
+                lambda full, new: full.at[shard].set(new),
+                self.states[r], st)
+            outs.append(out)
+        return outs[0]
+
+    def create_volume(self, shard: int) -> int:
+        return int(jax.device_get(self._shard_op(shard, dbs.create_volume)))
+
+    def snapshot(self, shard: int, vol: int) -> int:
+        return int(jax.device_get(self._shard_op(
+            shard, lambda s: dbs.snapshot(s, jnp.int32(vol)))))
+
+    # -- fused data plane ----------------------------------------------------
+    def device_state(self):
+        """(states, pools, healthy): R stacked replica pytrees, R stacked
+        pools, and the dense (S, R) health mask — the arguments the vmapped
+        engine step threads through one compiled program. The mask's device
+        copy is cached (health changes only on fail/rebuild control ops) so
+        the pump path pays no per-iteration host-to-device transfer."""
+        pools = () if self.null_storage else tuple(self.pools)
+        if self._healthy_dev is None:
+            self._healthy_dev = jnp.asarray(self.healthy)
+        return tuple(self.states), pools, self._healthy_dev
+
+    def set_device_state(self, states, pools) -> None:
+        self.states = list(states)
+        if pools:
+            self.pools = list(pools)
+
+    def bump_rr(self) -> jnp.ndarray:
+        """Return the (S,) read cursors and advance them — a device-side add,
+        so the pump path never syncs on the cursor."""
+        rr = self._rr
+        self._rr = rr + 1
+        return rr
+
+    # -- host read path (verification / non-pump readback) -------------------
+    def read(self, shard: int, vol: int, pages: jnp.ndarray,
+             block_offsets: jnp.ndarray) -> jnp.ndarray:
+        """Read a batch from one healthy replica of ``shard`` (host path,
+        used by tests and tooling — the pump serves reads in-program)."""
+        for r in range(self.n_replicas):
+            if not self.healthy[shard, r]:
+                continue
+            if self.null_storage:
+                return jnp.zeros((pages.shape[0],) + self.pools[r].shape[3:],
+                                 self.pools[r].dtype)
+            st = jax.tree.map(lambda x: x[shard], self.states[r])
+            return _read_jit(st, self.pools[r][shard],
+                             jnp.asarray(vol, jnp.int32), pages,
+                             block_offsets)
+        raise RuntimeError(f"no healthy replica in shard {shard}")
+
+    # -- fault handling (per shard) ------------------------------------------
+    def _check(self, shard: int, replica: int) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise IndexError(f"shard index {shard} out of range "
+                             f"[0, {self.n_shards})")
+        if not 0 <= replica < self.n_replicas:
+            raise IndexError(f"replica index {replica} out of range "
+                             f"[0, {self.n_replicas})")
+
+    def fail(self, shard: int, replica: int) -> None:
+        """Mark one shard's replica faulty. Refuses to fail the shard's
+        last healthy replica (same controller semantics as
+        ``ReplicaGroup.fail``): in the vmapped step an all-failed shard
+        would silently drop writes and fabricate zero reads, since lane
+        completion flags only track slot admission."""
+        self._check(shard, replica)
+        if self.healthy[shard, replica] and self.healthy[shard].sum() == 1:
+            raise RuntimeError(
+                f"replica {replica} is shard {shard}'s last healthy "
+                "replica; failing it would lose the shard's volumes")
+        self.healthy[shard, replica] = False
+        self._healthy_dev = None
+
+    def rebuild(self, shard: int, replica: int) -> None:
+        """Restore shard ``shard``'s replica ``replica`` from the shard's
+        most up-to-date healthy copy (same protocol as
+        ``ReplicaGroup.rebuild``, scoped to one shard's slice)."""
+        self._check(shard, replica)
+        if self.healthy[shard, replica]:
+            raise ValueError(f"shard {shard} replica {replica} is healthy; "
+                             "only a failed replica can be rebuilt")
+        donors = [r for r in range(self.n_replicas) if self.healthy[shard, r]]
+        if not donors:
+            raise RuntimeError(f"no healthy replica in shard {shard} "
+                               "to rebuild from")
+        donor = max(donors, key=lambda r: int(
+            jax.device_get(self.states[r].revision[shard])))
+        self.states[replica] = jax.tree.map(
+            lambda full, src: full.at[shard].set(src[shard]),
+            self.states[replica], self.states[donor])
+        self.pools[replica] = self.pools[replica].at[shard].set(
+            self.pools[donor][shard])
+        self.healthy[shard, replica] = True
+        self._healthy_dev = None
+
+    def consistent(self, shard: Optional[int] = None) -> bool:
+        """Healthy replicas of a shard (or of every shard) agree on the
+        metadata revision."""
+        shards = range(self.n_shards) if shard is None else [shard]
+        for s in shards:
+            revs = {int(jax.device_get(self.states[r].revision[s]))
+                    for r in range(self.n_replicas) if self.healthy[s, r]}
+            if len(revs) > 1:
+                return False
+        return True
 
 
 # ---------------------------------------------------------------------------

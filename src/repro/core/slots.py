@@ -98,9 +98,22 @@ class SlotTable:
 
 
 def make_table(n_slots: int) -> SlotTable:
-    z = jnp.zeros((n_slots,), jnp.int32)
+    # every leaf owns its buffer: the fused/sharded engine steps donate the
+    # whole table, and one buffer referenced by two donated leaves is an
+    # XLA error ("attempt to donate the same buffer twice")
+    z = lambda: jnp.zeros((n_slots,), jnp.int32)
     return SlotTable(ring=make_ring(n_slots), active=jnp.zeros((n_slots,), bool),
-                     seq_len=z, volume=z - 1, queue=z, arrival=z)
+                     seq_len=z(), volume=z() - 1, queue=z(), arrival=z())
+
+
+def make_sharded_table(n_shards: int, n_slots: int) -> SlotTable:
+    """S independent Messages Arrays in shard-major layout: every leaf of the
+    SlotTable pytree gains a leading (S,) axis, so slot ``(s, i)`` belongs to
+    shard ``s`` exclusively — the layout ``jax.vmap`` maps over when one
+    compiled admission program serves all shards (core/sharded.py)."""
+    table = make_table(n_slots)
+    return jax.tree.map(
+        lambda x: jnp.tile(x[None], (n_shards,) + (1,) * x.ndim), table)
 
 
 def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,

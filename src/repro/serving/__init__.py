@@ -1,1 +1,2 @@
-from repro.serving.engine import GenRequest, ServeEngine  # noqa: F401
+from repro.serving.engine import (GenRequest, ServeEngine,  # noqa: F401
+                                  ServePool)

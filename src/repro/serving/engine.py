@@ -272,3 +272,66 @@ class ServeEngine:
                     self.frontend.depth() == 0:
                 break
         return {rid: g.out_tokens for rid, g in self.live.items()}
+
+
+class ServePool:
+    """The serve path over a pool of engine shards (core/sharded.py's scale
+    axis applied to serving): S independent ServeEngine "nodes", requests
+    hash-sharded by ``req_id % S``, stepped together.
+
+    Each shard keeps its own slot table, DBS metadata and KV pools — the
+    same isolation the block-engine ``EnginePool`` gives its shards — so a
+    heavy tenant saturates one shard's slots without starving the others.
+    Forking stays shard-local (``dbs.clone`` shares extents only within one
+    DBS state), so a forked child lives on its parent's shard regardless of
+    its req_id; ``_home`` tracks that routing.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, n_shards: int = 2, **kw):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.shards = [ServeEngine(cfg, params, **kw)
+                       for _ in range(n_shards)]
+        self._home: Dict[int, int] = {}
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_of(self, req_id: int) -> int:
+        return self._home.get(req_id, req_id % self.n_shards)
+
+    def submit(self, req: GenRequest) -> None:
+        # hash routing only — recording it in _home would let a later
+        # submit clobber a live forked child's off-hash home
+        self.shards[req.req_id % self.n_shards].submit(req)
+
+    def fork(self, req_id: int, new_req_id: int, max_new: int = 16
+             ) -> Optional[GenRequest]:
+        shard = self.shard_of(req_id)
+        child = self.shards[shard].fork(req_id, new_req_id, max_new)
+        if child is not None and shard != new_req_id % self.n_shards:
+            self._home[new_req_id] = shard       # off-hash: remember it
+        return child
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One pool iteration: every shard's continuous-batching step."""
+        out: List[Tuple[int, int]] = []
+        for sh in self.shards:
+            out.extend(sh.step())
+        for rid in [r for r, s in self._home.items()
+                    if self.shards[s].live.get(r) is not None
+                    and self.shards[s].live[r].done]:
+            del self._home[rid]                  # finished forks: unpin
+        return out
+
+    def run(self, max_steps: int = 64) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            self.step()
+            if all(all(g.done for g in sh.live.values())
+                   and sh.frontend.depth() == 0 for sh in self.shards):
+                break
+        out: Dict[int, List[int]] = {}
+        for sh in self.shards:
+            out.update({rid: g.out_tokens for rid, g in sh.live.items()})
+        return out

@@ -1,0 +1,83 @@
+"""ReplicaGroup contracts: null-storage read dispatch count and
+fail/rebuild validation (paper §III controller semantics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dbs
+from repro.core.replication import ReplicaGroup
+
+
+def _group(**kw):
+    base = dict(n_replicas=2, n_extents=64, max_volumes=4, max_pages=32,
+                page_blocks=8, payload_shape=(4,))
+    base.update(kw)
+    return ReplicaGroup(**base)
+
+
+def test_null_storage_read_dispatches_nothing(monkeypatch):
+    """Regression: the null-storage read path used to dispatch (and
+    discard) a read_resolve per batch — a dead device op on the layer-cut
+    row whose whole point is measuring the stack WITHOUT storage work."""
+    g = _group(null_storage=True)
+    vol = g.create_volume()
+    calls = []
+    real = dbs.read_resolve
+    monkeypatch.setattr(dbs, "read_resolve",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    out = g.read(vol, jnp.arange(8, dtype=jnp.int32),
+                 jnp.zeros((8,), jnp.int32))
+    assert out.shape == (8, 4)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+    assert calls == [], f"null-storage read dispatched {len(calls)} resolves"
+
+
+def test_null_storage_read_matches_real_read_shape():
+    real = _group()
+    null = _group(null_storage=True)
+    for g in (real, null):
+        vol = g.create_volume()
+        g.write(vol, jnp.arange(4, dtype=jnp.int32),
+                jnp.zeros((4,), jnp.int32), jnp.ones((4, 4)))
+    a = real.read(0, jnp.arange(4, dtype=jnp.int32), jnp.zeros((4,), jnp.int32))
+    b = null.read(0, jnp.arange(4, dtype=jnp.int32), jnp.zeros((4,), jnp.int32))
+    assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_fail_validates_index():
+    g = _group()
+    with pytest.raises(IndexError):
+        g.fail(2)
+    with pytest.raises(IndexError):
+        g.fail(-1)
+    g.fail(1)                                   # in range: fine
+    assert not g.replicas[1].healthy
+
+
+def test_rebuild_rejects_healthy_replica():
+    g = _group()
+    vol = g.create_volume()
+    g.write(vol, jnp.arange(4, dtype=jnp.int32), jnp.zeros((4,), jnp.int32),
+            jnp.ones((4, 4)))
+    with pytest.raises(ValueError):
+        g.rebuild(0)                            # nothing failed
+    with pytest.raises(IndexError):
+        g.rebuild(9)
+    g.fail(0)
+    g.write(vol, jnp.arange(4, dtype=jnp.int32), jnp.ones((4,), jnp.int32),
+            jnp.full((4, 4), 2.0))              # replica 0 misses this
+    g.rebuild(0)                                # valid: was failed
+    assert g.replicas[0].healthy and g.consistent()
+
+
+def test_fail_refuses_last_healthy_replica():
+    """Failing every replica is volume loss, not failover — the controller
+    keeps one serving copy (a write would otherwise silently ack-and-drop
+    in the fused step, whose ok flags only track slot admission)."""
+    g = _group()
+    g.fail(0)
+    with pytest.raises(RuntimeError):
+        g.fail(1)
+    g.rebuild(0)
+    g.fail(1)                                   # fine again: 0 is healthy
+    assert g.replicas[0].healthy and not g.replicas[1].healthy

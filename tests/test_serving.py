@@ -125,3 +125,29 @@ def test_multiqueue_frontend_backpressure():
     fe.complete(ids[:4])
     _, admitted2 = fe.poll_batch()
     assert len(admitted2) == 4
+
+
+def test_serve_pool_shards_and_completes(small_model):
+    """ServePool: requests hash across S ServeEngine shards, all complete,
+    forks stay on the parent's shard, per-shard DBS state stays leak-free."""
+    from repro.serving import ServePool
+    cfg, params = small_model
+    pool = ServePool(cfg, params, n_shards=2, n_slots=4, max_len=64)
+    rng = np.random.default_rng(2)
+    n_req = 5
+    for rid in range(n_req):
+        pool.submit(GenRequest(req_id=rid,
+                               prompt=rng.integers(0, cfg.vocab_size,
+                                                   size=(6 + rid,)),
+                               max_new=6))
+    for _ in range(3):
+        pool.step()
+    child = pool.fork(0, 10, max_new=2)         # rid 10 hashes to shard 0...
+    assert child is not None
+    assert pool.shard_of(10) == pool.shard_of(0)   # ...because parent owns it
+    outs = pool.run(max_steps=30)
+    assert set(outs) == set(range(n_req)) | {10}
+    assert all(len(outs[r]) == 6 for r in range(n_req))
+    for sh in pool.shards:
+        st = D.stats(sh.state)
+        assert st["extents_used"] == 0 and st["volumes"] == 0, st

@@ -1,0 +1,294 @@
+"""The sharded engine pool (core/sharded.py).
+
+Contracts:
+
+1. **shard-vs-loop equivalence** — an EnginePool with S shards reaches
+   byte-identical volume contents (and identical per-shard DBS metadata)
+   vs S independent fused Engines fed the same per-volume streams,
+2. **one compiled program per pump** — a drain over S shards of mixed
+   traffic traces the vmapped step once per geometry (jit trace count),
+   and every pump is exactly one dispatch of it,
+3. **pipelined drain** — ``drain`` (double-buffered completion) completes
+   exactly the submitted set under mixed read/write, including requeues
+   when admission starves,
+4. **per-shard failover** — failing one replica of one shard mid-drain
+   leaves every shard's data intact; rebuild restores consistency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineConfig, Request
+from repro.core.sharded import EnginePool
+
+
+def _cfg(**kw):
+    base = dict(comm="sharded", storage="dbs", payload_shape=(8,),
+                n_extents=256, max_pages=64, batch=16, n_replicas=2,
+                n_shards=3, max_volumes=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mixed_traffic(n, vols, pages=48):
+    """Deterministic mixed read/write stream over the given volumes."""
+    reqs = []
+    for i in range(n):
+        v = vols[i % len(vols)]
+        if i % 2:
+            reqs.append(Request(req_id=i, kind="write", volume=v,
+                                page=i % pages, block=(i * 3) % 8,
+                                payload=jnp.full((8,), float(i + 1))))
+        else:
+            reqs.append(Request(req_id=i, kind="read", volume=v,
+                                page=(i // 2) % pages, block=0))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# 1. shard-vs-loop equivalence
+# ---------------------------------------------------------------------------
+def test_pool_matches_independent_engines():
+    """EnginePool(S=3) == 3 independent comm='fused' engines, fed the same
+    per-volume request streams: identical volume contents AND identical
+    per-shard replica DBS pytrees (the stacked state evolves exactly as the
+    loop of engines would)."""
+    S = 3
+    pool = EnginePool(_cfg(n_shards=S))
+    singles = [Engine(EngineConfig(comm="fused", storage="dbs",
+                                   payload_shape=(8,), n_extents=256,
+                                   max_pages=64, batch=16, n_replicas=2,
+                                   max_volumes=16))
+               for _ in range(S)]
+    gvols = [pool.create_volume() for _ in range(S)]       # one per shard
+    svols = [e.create_volume() for e in singles]
+    assert sorted(g % S for g in gvols) == list(range(S))
+
+    for i in range(90):                        # writes, all shards
+        pay = jnp.full((8,), float(i + 1))
+        s = i % S
+        pool.submit(Request(req_id=i, kind="write", volume=gvols[s],
+                            page=i % 48, block=i % 8, payload=pay))
+        singles[s].submit(Request(req_id=i, kind="write", volume=svols[s],
+                                  page=i % 48, block=i % 8, payload=pay))
+    assert pool.drain() == 90
+    assert sum(e.drain() for e in singles) == 90
+
+    for s in range(S):                         # snapshot -> CoW overwrites
+        pool.snapshot(gvols[s])
+        singles[s].snapshot(svols[s])
+    for i in range(45):
+        pay = jnp.full((8,), float(1000 + i))
+        s = i % S
+        pool.submit(Request(req_id=i, kind="write", volume=gvols[s],
+                            page=i % 24, block=(i * 5) % 8, payload=pay))
+        pool.submit(Request(req_id=500 + i, kind="read", volume=gvols[s],
+                            page=i % 24, block=0))
+        singles[s].submit(Request(req_id=i, kind="write", volume=svols[s],
+                                  page=i % 24, block=(i * 5) % 8,
+                                  payload=pay))
+        singles[s].submit(Request(req_id=500 + i, kind="read",
+                                  volume=svols[s], page=i % 24, block=0))
+    assert pool.drain() == 90
+    assert sum(e.drain() for e in singles) == 90
+
+    pages = jnp.arange(48, dtype=jnp.int32)
+    for s in range(S):
+        for blk in range(8):
+            offs = jnp.full((48,), blk, jnp.int32)
+            a = pool.read_volume(gvols[s], pages, offs)
+            b = singles[s].backend.read(svols[s], pages, offs)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       err_msg=f"shard {s} block {blk}")
+    # stacked replica metadata == each standalone engine's replica metadata
+    for s in range(S):
+        shard = gvols[s] % S
+        for r in range(2):
+            stacked = jax.tree.map(lambda x: x[shard],
+                                   pool.backend.states[r])
+            single = singles[s].backend.replicas[r].state
+            for a, b in zip(jax.tree.leaves(stacked),
+                            jax.tree.leaves(single)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert pool.backend.consistent()
+
+
+# ---------------------------------------------------------------------------
+# 2. one compiled program serves all S shards per pump
+# ---------------------------------------------------------------------------
+def test_one_program_per_pump():
+    pool = EnginePool(_cfg(n_shards=4))
+    vols = [pool.create_volume() for _ in range(8)]
+    for r in _mixed_traffic(160, vols):
+        pool.submit(r)
+    done = pool.drain()
+    assert done == 160
+    # several pumps happened, all served by ONE traced program per variant
+    assert pool.dispatches >= 3
+    assert pool.trace_counts["step"] == 1, pool.trace_counts
+    assert pool.trace_counts["step_read"] <= 1, pool.trace_counts
+    # more traffic, same geometry: no retracing
+    before = dict(pool.trace_counts)
+    for r in _mixed_traffic(80, vols):
+        pool.submit(r)
+    assert pool.drain() == 80
+    assert pool.trace_counts == before
+
+
+# ---------------------------------------------------------------------------
+# 3. pipelined drain: exact completion under requeues
+# ---------------------------------------------------------------------------
+def test_pipelined_drain_completes_exact_set_with_requeues():
+    """More in-flight requests than slots: admission starves, the pump
+    requeues not-admitted lanes at completion (one iteration behind the
+    launch it missed), and the pipelined drain still completes exactly the
+    submitted set."""
+    pool = EnginePool(_cfg(n_shards=2, n_slots=8, batch=8))
+    vols = [pool.create_volume() for _ in range(4)]
+    n = 200                                     # >> slots * shards
+    reads = []
+    for i in range(n):
+        v = vols[i % 4]
+        if i % 3 == 0:
+            r = Request(req_id=i, kind="read", volume=v, page=i % 32,
+                        block=0)
+            reads.append(r)
+            pool.submit(r)
+        else:
+            pool.submit(Request(req_id=i, kind="write", volume=v,
+                                page=i % 32, block=i % 8,
+                                payload=jnp.full((8,), float(i))))
+    assert pool.drain() == n
+    assert pool.completed == n
+    assert pool.frontend.depth() == 0
+    # every read delivered a result array (zeros for unwritten holes)
+    assert all(r.result is not None for r in reads)
+
+
+def test_pump_async_overlaps_completion():
+    """pump_async returns a handle without fetching; the handle completes
+    later with the right per-lane results."""
+    pool = EnginePool(_cfg(n_shards=2))
+    vols = [pool.create_volume() for _ in range(2)]
+    for i in range(10):
+        pool.submit(Request(req_id=i, kind="write", volume=vols[i % 2],
+                            page=i, block=0,
+                            payload=jnp.full((8,), float(i + 1))))
+    p1 = pool.pump_async()
+    assert p1 is not None and pool.completed == 0     # nothing fetched yet
+    # second batch admitted while the first is (logically) in flight
+    rd = Request(req_id=90, kind="read", volume=vols[0], page=0, block=0)
+    pool.submit(rd)
+    p2 = pool.pump_async()
+    assert pool._complete(p1) == 10
+    assert pool._complete(p2) == 1
+    np.testing.assert_allclose(np.asarray(rd.result), np.full((8,), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# 4. per-shard failover
+# ---------------------------------------------------------------------------
+def test_per_shard_failover_mid_drain():
+    pool = EnginePool(_cfg(n_shards=3))
+    vols = [pool.create_volume() for _ in range(3)]
+    for i in range(60):
+        pool.submit(Request(req_id=i, kind="write", volume=vols[i % 3],
+                            page=i % 20, block=0,
+                            payload=jnp.full((8,), float(i + 1))))
+    assert pool.drain() == 60
+    baseline = {v: np.asarray(pool.read_volume(
+        v, jnp.arange(20, dtype=jnp.int32), jnp.zeros(20, jnp.int32)))
+        for v in vols}
+
+    sick = vols[1] % 3
+    pool.backend.fail(sick, 0)                  # one replica of ONE shard
+    for i in range(30):                         # mid-drain traffic everywhere
+        pool.submit(Request(req_id=100 + i, kind="write",
+                            volume=vols[i % 3], page=20 + (i % 10), block=0,
+                            payload=jnp.full((8,), float(200 + i))))
+        pool.submit(Request(req_id=500 + i, kind="read", volume=vols[i % 3],
+                            page=i % 20, block=0))
+    assert pool.drain() == 60
+
+    # surviving shards' replicas stayed consistent; old data intact everywhere
+    for s in range(3):
+        if s != sick:
+            assert pool.backend.consistent(s)
+    for v in vols:
+        got = np.asarray(pool.read_volume(
+            v, jnp.arange(20, dtype=jnp.int32), jnp.zeros(20, jnp.int32)))
+        np.testing.assert_allclose(got, baseline[v],
+                                   err_msg=f"volume {v} lost old data")
+
+    pool.backend.rebuild(sick, 0)
+    assert pool.backend.consistent()
+    # the rebuilt replica serves the writes it missed
+    healthy_before = pool.backend.healthy.copy()
+    pool.backend.fail(sick, 1)                  # force reads from replica 0
+    got = np.asarray(pool.read_volume(
+        vols[1], jnp.asarray([20], jnp.int32), jnp.zeros(1, jnp.int32)))
+    assert got[0][0] >= 200.0                   # a mid-drain write, rebuilt
+    pool.backend.rebuild(sick, 1)
+    np.testing.assert_array_equal(pool.backend.healthy, healthy_before)
+
+
+def test_shard_failover_validation():
+    pool = EnginePool(_cfg(n_shards=2))
+    with pytest.raises(IndexError):
+        pool.backend.fail(5, 0)
+    with pytest.raises(IndexError):
+        pool.backend.fail(0, 7)
+    with pytest.raises(ValueError):
+        pool.backend.rebuild(0, 0)              # healthy: nothing to rebuild
+    pool.backend.fail(0, 0)
+    with pytest.raises(RuntimeError):
+        pool.backend.fail(0, 1)                 # last healthy in shard 0
+    pool.backend.fail(1, 1)                     # other shard: independent
+    with pytest.raises(IndexError):
+        pool.backend.rebuild(3, 0)
+    pool.backend.rebuild(0, 0)
+    pool.backend.rebuild(1, 1)
+    assert pool.backend.healthy.all()
+
+
+# ---------------------------------------------------------------------------
+# engine routing + null layers + ladder integration
+# ---------------------------------------------------------------------------
+def test_engine_routes_sharded_comm():
+    eng = Engine(_cfg(n_shards=2))
+    assert eng.pool is not None
+    vols = [eng.create_volume() for _ in range(2)]
+    for r in _mixed_traffic(40, vols, pages=32):
+        eng.submit(r)
+    assert eng.drain() == 40
+    assert eng.completed == 40
+    eng.completed = 0                           # the ladder's reset idiom
+    assert eng.pool.completed == 0
+
+
+@pytest.mark.parametrize("kw", [dict(null_backend=True),
+                                dict(null_storage=True)])
+def test_sharded_null_rows_complete(kw):
+    eng = Engine(_cfg(n_shards=2, **kw))
+    vol = eng.create_volume()
+    for i in range(40):
+        eng.submit(Request(req_id=i, kind="write" if i % 2 else "read",
+                           volume=vol, page=i % 64, block=0,
+                           payload=jnp.ones((8,))))
+    assert eng.drain() == 40, kw
+
+
+def test_ladder_has_sharded_column():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.ladder import COLUMNS, make_engine
+    assert "+sharded" in COLUMNS
+    eng = make_engine("+sharded", "full_engine", payload_shape=(8,),
+                      max_pages=64, n_extents=256, n_shards=2)
+    assert eng.cfg.comm == "sharded"
+    vols = [eng.create_volume() for _ in range(2)]
+    for r in _mixed_traffic(24, vols, pages=32):
+        eng.submit(r)
+    assert eng.drain() == 24
