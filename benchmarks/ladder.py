@@ -12,15 +12,25 @@ Columns (cumulative, mirroring Tables I/II — see docs/ARCHITECTURE.md):
   +sharded      EnginePool (core/sharded.py): S engine shards served by ONE
                 vmapped fused step per pump, volumes hashed across shards,
                 pipelined (double-buffered) completion
+  +ring         SQ/CQ ring protocol (core/ring.py): opcode-tagged SQE path
+                carrying data AND control ops through the same sharded
+                step, CQ completion records on device
 
 Rows (layer cuts): frontend-only (null backend) / without-storage (null
 storage) / full engine.
 
+``run_mixed_control`` measures the workload the ring exists for: a data
+stream with ~5% snapshot/unmap control ops. ``+ring`` executes them
+in-band; the ``fence`` baseline is the pre-ring engine (``+fused``), which
+must drain the pipeline and dispatch each control op host-side.
+
 Also a CLI (the CI bench-smoke job): ``python -m benchmarks.ladder --smoke
---out BENCH.json --check`` runs a tiny-geometry ladder, writes the JSON
-artifact, and exits non-zero if the ``+fused``/``+sharded`` columns fall
-below the device-resident ``+dbs`` baseline on any row (see
-``check_no_regression`` for why upstream is not the CPU-smoke floor).
+--out BENCH.json --check`` runs a tiny-geometry ladder + the mixed
+data+control workload, writes the JSON artifact, and exits non-zero if
+``+fused``/``+sharded``/``+ring`` fall below the device-resident ``+dbs``
+baseline on any row, if ``+ring`` falls below ``+fused`` on the pure-data
+rows, or if in-band control loses to the fence-per-control-op baseline
+(see ``check_no_regression`` for why upstream is not the CPU-smoke floor).
 """
 from __future__ import annotations
 
@@ -36,7 +46,8 @@ import numpy as np
 
 from repro.core import Engine, EngineConfig, Request, UpstreamEngine
 
-COLUMNS = ("upstream", "+frontend", "+comm", "+dbs", "+fused", "+sharded")
+COLUMNS = ("upstream", "+frontend", "+comm", "+dbs", "+fused", "+sharded",
+           "+ring")
 ROWS = ("frontend_only", "without_storage", "full_engine")
 
 
@@ -62,6 +73,9 @@ def make_engine(column: str, row: str, *, payload_shape=(64,),
         return Engine(EngineConfig(storage="dbs", comm="fused", **kw))
     if column == "+sharded":
         return Engine(EngineConfig(storage="dbs", comm="sharded",
+                                   n_shards=n_shards, **kw))
+    if column == "+ring":
+        return Engine(EngineConfig(storage="dbs", comm="ring",
                                    n_shards=n_shards, **kw))
     raise ValueError(column)
 
@@ -91,6 +105,14 @@ def measure_engine(eng, *, n_requests: int, kind: str, pages: int,
             eng.submit(Request(req_id=cap + i, kind="read",
                                volume=vols[i % n_volumes],
                                page=i % pages, block=i % 8))
+        eng.drain()
+        # an interleaved batch too: the ring engine compiles one program per
+        # opcode-class signature, and a mixed read+write batch is its own
+        for i in range(cap):
+            eng.submit(Request(req_id=2 * cap + i,
+                               kind="write" if i % 2 else "read",
+                               volume=vols[i % n_volumes],
+                               page=i % pages, block=i % 8, payload=payload))
         eng.drain()
         eng.completed = 0
     for i in range(n_requests):
@@ -126,6 +148,92 @@ def run_ladder(*, n_requests: int = 512, payload_elems: int = 64,
                     n_volumes=n_volumes, payload=payload, warmup=warmup)
                 for _ in range(repeats))
     return out
+
+
+def _control_stream(n_requests: int, ctrl_every: int, pages: int,
+                    n_volumes: int):
+    """Deterministic mixed data+control op stream (~1/ctrl_every control
+    ops, alternating snapshot/unmap — the paper's snapshot-heavy tenant)."""
+    ops = []
+    snap = True
+    for i in range(n_requests):
+        v = i % n_volumes
+        if ctrl_every and i % ctrl_every == ctrl_every - 1:
+            ops.append(("snapshot" if snap else "unmap", v, (i * 7) % pages))
+            snap = not snap
+        elif i % 2:
+            ops.append(("write", v, i % pages))
+        else:
+            ops.append(("read", v, (i // 2) % pages))
+    return ops
+
+
+def run_mixed_control(*, n_requests: int = 512, ctrl_every: int = 20,
+                      payload_elems: int = 64, pages: int = 256,
+                      n_volumes: int = 4, repeats: int = 1,
+                      **_ignored) -> Dict[str, float]:
+    """The workload the ring protocol exists for: ~5% in-band control ops.
+
+    ``+ring`` submits snapshot/unmap as opcode-tagged requests into the
+    same stream as the data ops — they execute inside the jitted step,
+    interleaved with foreground traffic. ``fence`` is the pre-ring
+    behaviour: the ``+fused`` engine must drain (fence) the pipeline at
+    every control op and dispatch it host-side. Both run one engine shard
+    (the fused fence baseline has no shard axis) so the comparison isolates
+    the protocol change. Returns best-of-``repeats`` ops/s per mode
+    (control ops count as ops — both modes complete the identical op
+    sequence)."""
+    payload = jnp.ones((payload_elems,), jnp.float32)
+    ops = _control_stream(n_requests, ctrl_every, pages, n_volumes)
+
+    def measure(mode: str) -> float:
+        eng = make_engine("+ring" if mode == "+ring" else "+fused",
+                          "full_engine", payload_shape=(payload_elems,),
+                          max_pages=pages, n_shards=1)
+        vols = [eng.create_volume() for _ in range(n_volumes)]
+        cap = getattr(eng.cfg, "batch", 64)
+        for i in range(cap):                  # warm every program variant
+            eng.submit(Request(req_id=i, kind="write" if i % 2 else "read",
+                               volume=vols[i % n_volumes], page=i % pages,
+                               block=i % 8, payload=payload))
+        if mode == "+ring":
+            eng.submit(Request(req_id=cap, kind="snapshot", volume=vols[0]))
+            eng.submit(Request(req_id=cap + 1, kind="unmap",
+                               volume=vols[0], page=0))
+        else:
+            eng.snapshot(vols[0])
+            eng.unmap(vols[0], [0])
+        eng.drain()
+        eng.completed = 0
+        t0 = time.perf_counter()
+        if mode == "+ring":                   # in-band: one stream, one drain
+            for i, (kind, v, page) in enumerate(ops):
+                eng.submit(Request(
+                    req_id=i, kind=kind, volume=vols[v], page=page,
+                    block=i % 8, payload=payload if kind == "write" else None))
+            done = eng.drain()
+        else:                                 # fence per control op
+            done = 0
+            for i, (kind, v, page) in enumerate(ops):
+                if kind in ("snapshot", "unmap"):
+                    done += eng.drain()       # flush everything in flight
+                    if kind == "snapshot":
+                        eng.snapshot(vols[v])
+                    else:
+                        eng.unmap(vols[v], [page])
+                    done += 1
+                else:
+                    eng.submit(Request(req_id=i, kind=kind, volume=vols[v],
+                                       page=page, block=i % 8,
+                                       payload=(payload if kind == "write"
+                                                else None)))
+            done += eng.drain()
+        dt = time.perf_counter() - t0
+        assert done == n_requests, (mode, done, n_requests)
+        return n_requests / dt
+
+    return {mode: max(measure(mode) for _ in range(repeats))
+            for mode in ("+ring", "fence")}
 
 
 def snapshot_degradation(*, n_snapshots=(0, 4, 16, 64), n_reads: int = 256,
@@ -186,7 +294,7 @@ SMOKE = dict(n_requests=512, payload_elems=16, pages=64, n_volumes=8,
 
 
 def check_no_regression(ladder: Dict[str, Dict[str, float]],
-                        columns=("+fused", "+sharded"),
+                        columns=("+fused", "+sharded", "+ring"),
                         baseline: str = "+dbs",
                         floor: float = 0.7) -> List[str]:
     """The fused/sharded columns must not collapse below the device-resident
@@ -212,6 +320,27 @@ def check_no_regression(ladder: Dict[str, Dict[str, float]],
     return problems
 
 
+def check_ring_gates(ladder: Dict[str, Dict[str, float]],
+                     mixed: Optional[Dict[str, float]] = None,
+                     floor: float = 0.7) -> List[str]:
+    """The ring column's two contracts (ISSUE 3 acceptance):
+
+    - pure-data rows: ``+ring`` holds the ``+fused`` column (the SQ/CQ
+      protocol must not tax the data path it generalizes),
+    - the mixed data+control workload: in-band control beats the
+      fence-per-control-op baseline.
+
+    ``floor`` leaves shared-runner noise margin within one run.
+    """
+    problems = check_no_regression(ladder, columns=("+ring",),
+                                   baseline="+fused", floor=floor)
+    if mixed is not None and mixed["+ring"] < mixed["fence"] * floor:
+        problems.append(
+            f"mixed_control: +ring {mixed['+ring']:.0f} ops/s < {floor:g}x "
+            f"fence baseline ({mixed['fence']:.0f} ops/s)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -230,28 +359,35 @@ def main(argv=None) -> int:
     if args.n_requests is not None:
         kw["n_requests"] = args.n_requests
     ladder = run_ladder(kind=args.kind, **kw)
+    mixed = run_mixed_control(**kw)
 
     width = max(len(c) for c in COLUMNS) + 2
     print("row".ljust(18) + "".join(c.rjust(width) for c in COLUMNS))
     for row in ROWS:
         cells = "".join(f"{ladder[c][row]:{width}.0f}" for c in COLUMNS)
         print(row.ljust(18) + cells + "   ops/s")
+    print("mixed data+control (~5% snapshot/unmap): "
+          f"+ring {mixed['+ring']:.0f} ops/s vs fence-per-control-op "
+          f"{mixed['fence']:.0f} ops/s")
 
     if args.out:
         doc = {"bench": "ladder", "kind": args.kind,
                "smoke": bool(args.smoke), "params": kw,
                "columns": list(COLUMNS), "rows": list(ROWS),
-               "ops_per_s": ladder}
+               "ops_per_s": ladder, "mixed_control": mixed}
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.out}")
 
     if args.check:
-        problems = check_no_regression(ladder)
+        problems = (check_no_regression(ladder)
+                    + check_ring_gates(ladder, mixed))
         if problems:
             print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
             return 1
-        print("check OK: +fused/+sharded hold the +dbs floor on every row")
+        print("check OK: +fused/+sharded/+ring hold the +dbs floor on every "
+              "row, +ring holds +fused on pure data and beats the fence on "
+              "mixed data+control")
     return 0
 
 

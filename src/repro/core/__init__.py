@@ -6,8 +6,9 @@
 #   replication.py  write-to-all / read-round-robin / rebuild (paper §III)
 #   fused.py        single-program fused engine step (admit->CoW->complete)
 #   sharded.py      EnginePool: S shards, one vmapped step, pipelined pump
+#   ring.py         SQ/CQ ring protocol: opcode-tagged data+control ops
 #   engine.py       the composed engine + upstream baseline + null layers
-from repro.core import dbs, slots  # noqa: F401
+from repro.core import dbs, ring, slots  # noqa: F401
 from repro.core.engine import Engine, EngineConfig, UpstreamEngine  # noqa: F401
 from repro.core.frontend import (MultiQueueFrontend, Request,  # noqa: F401
                                  ShardedFrontend, UpstreamFrontend)
@@ -15,4 +16,6 @@ from repro.core.fused import (FusedBatch, fused_step,  # noqa: F401
                               fused_step_read)
 from repro.core.replication import (ReplicaGroup,  # noqa: F401
                                     ShardedReplicaGroup)
+from repro.core.ring import (CQ, SQE, RingEngine,  # noqa: F401
+                             RingFrontend)
 from repro.core.sharded import EnginePool  # noqa: F401

@@ -9,7 +9,11 @@ Null-layer switches implement the paper's §IV-A methodology:
   null_storage  — replicas ack without touching DBS (no-storage run)
 
 ``comm="fused"`` routes pump() through the single-program fused step
-(core/fused.py). Pipeline and ladder columns: docs/ARCHITECTURE.md.
+(core/fused.py); ``comm="ring"`` through the opcode-tagged SQ/CQ ring
+protocol (core/ring.py), where ``snapshot``/``clone``/``unmap``/
+``delete_volume``/``fail``/``rebuild`` become ring submissions executed
+in-band with foreground I/O. Pipeline and ladder columns:
+docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dbs
 from repro.core.frontend import MultiQueueFrontend, Request, UpstreamFrontend
@@ -43,6 +48,7 @@ class EngineConfig:
     comm: str = "slots"          # slots (Messages Array) | loop (per-request)
                                  # | fused (single-program step, core/fused.py)
                                  # | sharded (vmapped EnginePool, core/sharded.py)
+                                 # | ring (opcode-tagged SQ/CQ, core/ring.py)
     cow: str = "auto"            # CoW data plane for comm="fused"/"sharded":
                                  # auto (pallas on TPU, ref elsewhere)
                                  # | pallas (force the dbs_copy kernel)
@@ -61,15 +67,21 @@ class Engine:
 
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg
-        if cfg.comm in ("fused", "sharded") and cfg.storage != "dbs":
+        if cfg.comm in ("fused", "sharded", "ring") and cfg.storage != "dbs":
             raise ValueError(f"comm={cfg.comm!r} requires storage='dbs'")
         if cfg.cow not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown cow impl {cfg.cow!r} "
                              "(expected auto | pallas | ref)")
-        if cfg.comm == "sharded":
+        if cfg.comm in ("sharded", "ring"):
             # the whole engine is the pool: S shards, one vmapped step
-            from repro.core.sharded import EnginePool
-            self.pool = EnginePool(cfg)
+            # (comm="ring" adds the opcode-dispatched SQ/CQ protocol, so
+            # control ops ride the same program as data I/O)
+            if cfg.comm == "ring":
+                from repro.core.ring import RingEngine
+                self.pool = RingEngine(cfg)
+            else:
+                from repro.core.sharded import EnginePool
+                self.pool = EnginePool(cfg)
             self.frontend = self.pool.frontend
             self.backend = self.pool.backend
             self._cow = self.pool._cow
@@ -107,13 +119,39 @@ class Engine:
             return 0
         return self.backend.create_volume()
 
-    def snapshot(self, vol: int) -> None:
+    # -- control plane (comm="ring": in-band ring submissions; other comms:
+    # host-side dispatch to the backend) ------------------------------------
+    def snapshot(self, vol: int):
         if self.pool is not None:
-            self.pool.snapshot(vol)
+            return self.pool.snapshot(vol)
+        if self.backend is not None:
+            return self.backend.snapshot(vol)
+        return None
+
+    def clone(self, vol: int) -> int:
+        if self.pool is not None:
+            return self.pool.clone(vol)
+        if self.backend is None:
+            return -1
+        return self.backend.clone(vol)
+
+    def unmap(self, vol: int, pages) -> None:
+        if self.pool is not None:
+            self.pool.unmap(vol, pages)
         elif self.backend is not None:
-            self.backend.snapshot(vol)
+            self.backend.unmap(vol, pages)
+
+    def delete_volume(self, vol: int) -> None:
+        if self.pool is not None:
+            self.pool.delete_volume(vol)
+        elif self.backend is not None:
+            self.backend.delete_volume(vol)
 
     def submit(self, req: Request) -> None:
+        if self.cfg.comm != "ring" and req.kind not in ("read", "write"):
+            raise ValueError(
+                f"kind={req.kind!r} requests need comm='ring' (the opcode-"
+                "tagged SQ/CQ path); other comm modes carry data ops only")
         self.frontend.submit(req)
 
     def _exec_write_batch(self, rs: List[Request]) -> None:
@@ -174,13 +212,16 @@ class Engine:
         # the single host hop: completion flags + completed read payloads
         ok_host, reads_host = jax.device_get((ok, reads))
         done = 0
+        requeues = []
         for i, r in enumerate(reqs):
             if ok_host[i]:
+                r.status = 0
                 if r.kind == "read":
                     r.result = reads_host[i]
                 done += 1
             else:
-                self.frontend.requeue(r)
+                requeues.append(r)
+        self.frontend.ring.requeue_all(requeues)
         self.completed += done
         return done
 
@@ -202,9 +243,11 @@ class Engine:
                     if r.kind == "write":
                         self._exec_write_batch([r])
                     else:
-                        self.backend.read(
+                        out = self.backend.read(
                             r.volume, jnp.asarray([r.page], jnp.int32),
                             jnp.asarray([r.block], jnp.int32))
+                        if out is not None:
+                            r.result = np.asarray(jax.device_get(out))[0]
             else:
                 writes = [r for r in reqs if r.kind == "write"]
                 reads = [r for r in reqs if r.kind == "read"]
@@ -212,10 +255,13 @@ class Engine:
                     self._exec_write_batch(writes)
                 if reads:
                     if self.cfg.storage == "chained":
-                        self.backend.read(
+                        out = self.backend.read(
                             [r.volume for r in reads],
                             [r.page for r in reads],
                             [r.block for r in reads])
+                        if out is not None:
+                            for r, v in zip(reads, out):
+                                r.result = v
                     else:
                         n, cap = len(reads), self.cfg.batch
                         pad = cap - (n % cap) if n % cap else 0
@@ -227,8 +273,22 @@ class Engine:
                             [r.block for r in reads] + [0] * pad, jnp.int32)
                         for i in range(0, n + pad, cap):
                             s = slice(i, i + cap)
-                            self.backend.read(vols[s], pages[s], offs[s])
+                            out = self.backend.read(vols[s], pages[s],
+                                                    offs[s])
+                            # one fetch per chunk, host indexing after:
+                            # per-lane out[j] would put O(B) tiny device
+                            # gathers on the pump (and deliver device
+                            # arrays where every other comm mode delivers
+                            # host numpy)
+                            out = np.asarray(jax.device_get(out))
+                            for j, r in enumerate(reads[i:i + cap]):
+                                r.result = out[j]
         done = self.frontend.complete(slot_ids)
+        for r in done:
+            # unified completion semantics across comm modes: every
+            # completed request carries a status (0 = OK), and reads carry
+            # their payload in ``result`` (see ring.CQ / tests/test_ring.py)
+            r.status = 0
         self.completed += len(done)
         return len(done)
 
@@ -255,12 +315,33 @@ class ChainedReplicas:
                        for _ in range(cfg.n_replicas)]
         self._rr = 0
 
+    def _agree(self, ids) -> int:
+        """Mirrored control ops must agree on the id every store assigned —
+        divergent per-store volume/clone ids would silently route every
+        subsequent read/write of that volume to different data on each
+        replica (the id returned here names the volume engine-wide)."""
+        if len(set(ids)) != 1:
+            raise RuntimeError(f"replica stores diverged on id: {ids}")
+        return ids[0]
+
     def create_volume(self) -> int:
-        return [s.create_volume() for s in self.stores][0]
+        return self._agree([s.create_volume() for s in self.stores])
 
     def snapshot(self, vol: int) -> None:
         for s in self.stores:
             s.snapshot(vol)
+
+    def clone(self, vol: int) -> int:
+        return self._agree([s.clone(vol) for s in self.stores])
+
+    def unmap(self, vol: int, pages) -> None:
+        for s in self.stores:
+            for p in pages:
+                s.unmap(vol, int(p))
+
+    def delete_volume(self, vol: int) -> None:
+        for s in self.stores:
+            s.delete_volume(vol)
 
     def write(self, vol, pages, offs, payload, mask=None) -> None:
         import numpy as _np
@@ -273,11 +354,14 @@ class ChainedReplicas:
 
     def read(self, vol, pages, offs):
         import numpy as _np
+        if self.cfg.null_storage:
+            # no store serves anything: do NOT advance the rr cursor — the
+            # layer-cut row must not skew the read distribution the real
+            # stores would see (ReplicaGroup.read holds the same contract)
+            return None
         s = self.stores[self._rr % len(self.stores)]
         self._rr += 1
         vols = _np.broadcast_to(_np.asarray(vol), (len(pages),))
-        if self.cfg.null_storage:
-            return None
         return [s.read(int(vols[i]), int(pages[i]), int(offs[i]))
                 for i in range(len(pages))]
 
@@ -303,8 +387,37 @@ class ChainedStore:
         self.chains[vid] = [{}]
         return vid
 
+    # control ops are no-op-on-miss (clone: -1), like the DBS path they are
+    # compared against — a deleted/unknown volume must not diverge the
+    # reference baseline into a KeyError where dbs completes harmlessly
     def snapshot(self, vol: int) -> None:
-        self.chains[vol].append({})     # new live layer
+        if vol in self.chains:
+            self.chains[vol].append({})     # new live layer
+
+    def clone(self, vol: int) -> int:
+        """Fork: freeze src (snapshot), share its frozen layers (the dicts
+        themselves — CoW at layer granularity), own a fresh live layer."""
+        if vol not in self.chains:
+            return -1
+        self.snapshot(vol)
+        vid = self._next
+        self._next += 1
+        self.chains[vid] = list(self.chains[vol][:-1]) + [{}]
+        return vid
+
+    def unmap(self, vol: int, page: int) -> None:
+        """TRIM a page: a tombstone in the live layer shadows older layers;
+        same-layer writes to the page are dropped (trim-after-write wins,
+        and a later write re-creates the key, so write-after-trim wins)."""
+        if vol not in self.chains:
+            return
+        live = self.chains[vol][-1]
+        for key in [k for k in live if k[0] == page]:
+            del live[key]
+        live[("TRIM", page)] = True
+
+    def delete_volume(self, vol: int) -> None:
+        self.chains.pop(vol, None)      # clones keep their shared layers
 
     def write(self, vol: int, page: int, block: int, payload) -> None:
         live = self.chains[vol][-1]
@@ -313,10 +426,12 @@ class ChainedStore:
 
     def read(self, vol: int, page: int, block: int):
         self.reads += 1
-        for layer in reversed(self.chains[vol]):   # walk the chain
+        for layer in reversed(self.chains.get(vol, ())):   # walk the chain
             self.layers_walked += 1
             if (page, block) in layer:
                 return layer[(page, block)]
+            if ("TRIM", page) in layer:
+                return None             # unmapped above any older data
         return None
 
 
@@ -335,7 +450,10 @@ class UpstreamEngine:
     def create_volume(self) -> int:
         if self.stores is None:
             return 0
-        return [s.create_volume() for s in self.stores][0]
+        ids = [s.create_volume() for s in self.stores]
+        if len(set(ids)) != 1:          # same hazard as ChainedReplicas
+            raise RuntimeError(f"replica stores diverged on id: {ids}")
+        return ids[0]
 
     def snapshot(self, vol: int) -> None:
         if self.stores is not None:
@@ -357,8 +475,9 @@ class UpstreamEngine:
             else:
                 s = self.stores[self._rr % len(self.stores)]
                 self._rr += 1
-                s.read(req.volume, req.page, req.block)
+                req.result = s.read(req.volume, req.page, req.block)
         self.frontend.complete(mid)
+        req.status = 0
         self.completed += 1
         return 1
 

@@ -8,14 +8,15 @@ analogue is request admission into the compiled engine:
 - ``UpstreamFrontend``: one queue, one dispatcher, one request per device
   call (a dict tracks in-flight requests) — deliberately faithful to the
   upstream structure, used as the measured baseline.
-- ``MultiQueueFrontend``: N admission rings drained into a single *batched*
-  jitted admission op backed by the SlotTable (Messages Array); queue depth =
-  slot count, no per-request host hop. Two drain paths: ``poll_batch`` (the
-  unfused ``comm="slots"`` engine) and ``drain_batch`` (raw arrays for the
-  fused step — admission state never leaves the device).
-- ``ShardedFrontend``: S multi-queue frontends (volume-hashed) whose slot
-  tables live as one shard-major stacked table; ``drain_sharded`` feeds the
-  vmapped EnginePool step (core/sharded.py) one (S, B, ...) batch.
+- ``RingFrontend`` (core/ring.py): THE drain protocol since the SQ/CQ
+  refactor — S shards × N admission queues drained into one opcode-tagged
+  ``SQE`` batch per pump (data ops AND control ops through the same path).
+- ``MultiQueueFrontend`` / ``ShardedFrontend``: thin adapters over a
+  RingFrontend that keep the legacy drain surfaces alive: ``poll_batch``
+  (the unfused ``comm="slots"`` engine), ``drain_batch`` (single-engine
+  ``comm="fused"``), and ``drain_sharded`` (the vmapped EnginePool). Each
+  converts the staged ring drain into its legacy batch shape; none owns
+  drain logic of its own anymore.
 
 See docs/ARCHITECTURE.md for where the frontend sits in the pipeline.
 """
@@ -23,8 +24,8 @@ from __future__ import annotations
 
 import collections
 import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,18 +33,23 @@ import numpy as np
 
 from repro.core import slots
 from repro.core.fused import FusedBatch
+from repro.core.ring import KIND_CLASS, OP_WRITE, RingFrontend
 
 
 @dataclass
 class Request:
     req_id: int
-    kind: str                 # "read" | "write"
-    volume: int
-    page: int
-    block: int = 0
+    kind: str                 # read | write | snapshot | clone | unmap |
+                              # delete | fail | rebuild | noop (ring opcodes)
+    volume: int = -1
+    page: int = 0
+    block: int = 0            # block offset; replica index for fail/rebuild
     payload: Any = None
-    result: Any = None        # filled with the read payload on completion
-                              # (fused path only; see docs/ARCHITECTURE.md)
+    shard: Optional[int] = None  # explicit shard (fail/rebuild; else by vol)
+    result: Any = None        # read payload / snapshot id / clone volume id
+    status: Any = None        # CQE status (ring.ST_*); 0 = completed OK
+    latency: Any = None       # completion latency in pump ticks (ring path)
+    tick: int = 0             # submission pump tick (stamped by the frontend)
 
 
 class UpstreamFrontend:
@@ -75,48 +81,71 @@ class UpstreamFrontend:
         return len(self.queue)
 
 
+def _reject_control(req) -> None:
+    """Legacy (data-only) frontends refuse control kinds at SUBMIT time:
+    rejecting at drain would have already popped the whole batch — dropping
+    innocent data requests alongside the offending one."""
+    if KIND_CLASS.get(req.kind) in ("vol", "repl"):
+        raise ValueError("control opcodes require comm='ring' "
+                         f"(got kind={req.kind!r} on a data-only frontend)")
+
+
+def _check_data_only(classes) -> None:
+    # defensive: unreachable via submit(), which rejects control kinds
+    ctrl = set(classes) - {"read", "write", "noop"}
+    if ctrl:
+        raise ValueError("control opcodes require comm='ring' "
+                         f"(got {sorted(ctrl)} on a legacy drain path)")
+
+
 class MultiQueueFrontend:
     """N admission queues + batched slot admission (paper Fig. 4 right).
 
-    ``with_table=False`` builds only the host-side admission rings — the
-    ShardedFrontend composes S of these but keeps the single authoritative
-    stacked slot table itself (a per-shard table here would be dead state
-    that ``poll_batch`` could silently diverge against).
+    A thin adapter over a single-shard ``RingFrontend``: submission,
+    requeueing and the round-robin drain live there; this class keeps the
+    legacy surfaces — ``poll_batch`` (admission as its own device op, slot
+    ids fetched back) and ``drain_batch`` (raw FusedBatch arrays for the
+    fused step) — by converting the staged ring drain.
+
+    ``with_table=False`` builds only the host-side admission rings (the
+    composing caller owns the authoritative slot table).
     """
 
     def __init__(self, n_queues: int, n_slots: int, batch: int = 64,
                  with_table: bool = True):
-        self.queues: List[Deque[Request]] = [collections.deque()
-                                             for _ in range(n_queues)]
+        self.ring = RingFrontend(1, n_queues, n_slots, batch,
+                                 with_table=False)
         self.table = slots.make_table(n_slots) if with_table else None
         self.batch = batch
-        self.step = 0
         self._by_slot: Dict[int, Request] = {}
 
+    @property
+    def queues(self) -> List[Deque[Request]]:
+        return self.ring.queues[0]
+
+    @property
+    def step(self) -> int:
+        return self.ring.step[0]
+
+    @step.setter
+    def step(self, v: int) -> None:
+        self.ring.step[0] = v
+
     def submit(self, req: Request) -> None:
-        self.queues[req.req_id % len(self.queues)].append(req)
+        _reject_control(req)
+        self.ring.submit(req)
 
     def depth(self) -> int:
-        return sum(len(q) for q in self.queues)
+        return self.ring.depth()
 
     def requeue(self, req: Request) -> None:
         """Put a not-admitted request back at the front of its queue."""
-        self.queues[req.req_id % len(self.queues)].appendleft(req)
+        self.ring.requeue(req)
 
     def _drain(self, limit: int) -> List[Request]:
-        """Host-only round-robin drain of up to ``limit`` requests — no
-        device ops, shared by the unfused and fused admission paths."""
-        reqs: List[Request] = []
-        qs = [q for q in self.queues if q]
-        while qs and len(reqs) < limit:
-            for q in list(qs):
-                if not q:
-                    qs.remove(q)
-                    continue
-                reqs.append(q.popleft())
-                if len(reqs) >= limit:
-                    break
-        return reqs
+        """Host-only round-robin drain of up to ``limit`` requests — the
+        shared ring drain, shard 0."""
+        return self.ring._drain_shard(0, limit)
 
     def drain_batch(self, payload_shape: Tuple[int, ...] = ()
                     ) -> Tuple[List[Request], Optional[FusedBatch]]:
@@ -125,32 +154,22 @@ class MultiQueueFrontend:
         itself happens *inside* ``fused_step`` (core/fused.py), so no slot id
         is ever read back — the admission state (``self.table``) stays on
         device across ``pump()`` iterations."""
-        reqs = self._drain(self.batch)
-        if not reqs:
+        drained, st, classes = self.ring._stage(payload_shape)
+        if st is None:
             return [], None
-        n, b = len(reqs), self.batch
-        pad = b - n
-        ints = lambda xs: jnp.asarray(np.asarray(xs + [0] * pad, np.int32))
-        # fill a host-side numpy buffer, ONE device transfer for the batch
-        # (a per-request jnp.stack puts O(B) tiny dispatches on the pump)
-        np_payload = np.zeros((b,) + tuple(payload_shape), np.float32)
-        for i, r in enumerate(reqs):
-            if r.payload is not None:
-                np_payload[i] = np.asarray(r.payload)
-        payload = jnp.asarray(np_payload)
+        _check_data_only(classes)
+        # shard 0's numpy lanes cross as ONE transfer per leaf, as before
         batch = FusedBatch(
-            want=jnp.arange(b) < n,
-            is_write=jnp.asarray(np.asarray(
-                [r.kind == "write" for r in reqs] + [False] * pad)),
-            volume=ints([r.volume for r in reqs]),
-            page=ints([r.page for r in reqs]),
-            block=ints([r.block for r in reqs]),
-            payload=payload,
-            queue=ints([r.req_id % len(self.queues) for r in reqs]),
-            step=jnp.int32(self.step),
+            want=jnp.asarray(st["want"][0]),
+            is_write=jnp.asarray(st["op"][0] == OP_WRITE),
+            volume=jnp.asarray(st["volume"][0]),
+            page=jnp.asarray(st["page"][0]),
+            block=jnp.asarray(st["block"][0]),
+            payload=jnp.asarray(st["payload"][0]),
+            queue=jnp.asarray(st["queue"][0]),
+            step=jnp.int32(int(st["step"][0])),
         )
-        self.step += 1
-        return reqs, batch
+        return drained[0], batch
 
     def poll_batch(self) -> Tuple[jnp.ndarray, List[Request]]:
         """Drain up to ``batch`` requests round-robin across queues and admit
@@ -173,13 +192,14 @@ class MultiQueueFrontend:
         self.step += 1
         ids_host = np.asarray(jax.device_get(ids))
         ok_host = np.asarray(jax.device_get(ok))
-        admitted = []
+        admitted, requeues = [], []
         for i, r in enumerate(reqs):
             if ok_host[i]:
                 self._by_slot[int(ids_host[i])] = r
                 admitted.append(r)
             else:  # no slot: requeue at the front
-                self.queues[r.req_id % len(self.queues)].appendleft(r)
+                requeues.append(r)
+        self.ring.requeue_all(requeues)
         return ids[:len(reqs)], admitted
 
     def complete(self, slot_ids: jnp.ndarray) -> List[Request]:
@@ -192,43 +212,42 @@ class MultiQueueFrontend:
 
 
 class ShardedFrontend:
-    """S multi-queue frontends feeding ONE vmapped admission program.
+    """S volume-hashed shards feeding ONE vmapped admission program.
 
-    Requests hash to a shard by volume id (``volume % S`` — a volume lives
-    entirely on one shard, like a Longhorn volume on its engine instance).
-    Each shard keeps its own host-side admission rings, but the S slot
-    tables are held as a single shard-major stacked ``SlotTable``
-    (slots.make_sharded_table) so the EnginePool's vmapped step admits and
-    retires every shard's batch in one compiled program.
-
-    ``drain_sharded`` is the fused-path drain: it pulls up to ``batch``
-    requests per shard and stacks the raw per-shard arrays into one
-    (S, B, ...) ``FusedBatch``. Shards with no traffic contribute an inert
-    all-padding batch lane set — the program geometry never depends on which
-    shards happen to be busy. Volume ids are translated to the shard-local
-    ids the device-side DBS states use (``volume // S``).
+    A thin adapter over an S-shard ``RingFrontend`` (which owns the queues,
+    the stacked shard-major ``SlotTable`` and the drain); ``drain_sharded``
+    converts the staged ring drain into the legacy stacked (S, B, ...)
+    ``FusedBatch`` the EnginePool step consumes. Volume ids are translated
+    to shard-local ids (``volume // S``) by the ring stage.
     """
 
     def __init__(self, n_shards: int, n_queues: int, n_slots: int,
                  batch: int = 64):
+        self.ring = RingFrontend(n_shards, n_queues, n_slots, batch,
+                                 with_table=True)
         self.n_shards = n_shards
         self.batch = batch
-        self.shards = [MultiQueueFrontend(n_queues, n_slots, batch,
-                                          with_table=False)
-                       for _ in range(n_shards)]
-        self.table = slots.make_sharded_table(n_shards, n_slots)
+
+    @property
+    def table(self) -> slots.SlotTable:
+        return self.ring.table
+
+    @table.setter
+    def table(self, t: slots.SlotTable) -> None:
+        self.ring.table = t
 
     def shard_of(self, volume: int) -> int:
         return volume % self.n_shards
 
     def submit(self, req: Request) -> None:
-        self.shards[self.shard_of(req.volume)].submit(req)
+        _reject_control(req)
+        self.ring.submit(req)
 
     def requeue(self, req: Request) -> None:
-        self.shards[self.shard_of(req.volume)].requeue(req)
+        self.ring.requeue(req)
 
     def depth(self) -> int:
-        return sum(f.depth() for f in self.shards)
+        return self.ring.depth()
 
     def drain_sharded(self, payload_shape: Tuple[int, ...] = ()
                       ) -> Tuple[List[List[Request]], Optional[FusedBatch]]:
@@ -238,40 +257,18 @@ class ShardedFrontend:
         when no shard had traffic. Request lists line up with batch lanes:
         shard s's request i rode lane (s, i); shards with no traffic
         contribute all-inert (want=False) rows, so the program geometry
-        never depends on which shards are busy.
-
-        The lane arrays are filled into host-side numpy buffers and cross
-        to the device as ONE transfer per leaf — not one per shard per
-        field, which would put O(S) tiny dispatches on the exact pump path
-        the shard axis exists to amortize. Volume ids are translated to the
-        shard-local ids the device-side DBS states use (``volume // S``).
+        never depends on which shards are busy. One device transfer per
+        leaf, as always on the pump path.
         """
-        drained = [f._drain(self.batch) for f in self.shards]
-        if not any(drained):
+        drained, st, classes = self.ring._stage(payload_shape)
+        if st is None:
             return [], None
-        s_n, b_n = self.n_shards, self.batch
-        want = np.zeros((s_n, b_n), bool)
-        is_write = np.zeros((s_n, b_n), bool)
-        ints = {k: np.zeros((s_n, b_n), np.int32)
-                for k in ("volume", "page", "block", "queue")}
-        step = np.zeros((s_n,), np.int32)
-        payload = np.zeros((s_n, b_n) + tuple(payload_shape), np.float32)
-        for s, (f, reqs) in enumerate(zip(self.shards, drained)):
-            step[s] = f.step
-            if reqs:
-                f.step += 1
-            for i, r in enumerate(reqs):
-                want[s, i] = True
-                is_write[s, i] = r.kind == "write"
-                ints["volume"][s, i] = r.volume // s_n
-                ints["page"][s, i] = r.page
-                ints["block"][s, i] = r.block
-                ints["queue"][s, i] = r.req_id % len(f.queues)
-                if r.payload is not None:
-                    payload[s, i] = np.asarray(r.payload)
+        _check_data_only(classes)
         batch = FusedBatch(
-            want=jnp.asarray(want), is_write=jnp.asarray(is_write),
-            volume=jnp.asarray(ints["volume"]), page=jnp.asarray(ints["page"]),
-            block=jnp.asarray(ints["block"]), payload=jnp.asarray(payload),
-            queue=jnp.asarray(ints["queue"]), step=jnp.asarray(step))
+            want=jnp.asarray(st["want"]),
+            is_write=jnp.asarray(st["op"] == OP_WRITE),
+            volume=jnp.asarray(st["volume"]), page=jnp.asarray(st["page"]),
+            block=jnp.asarray(st["block"]),
+            payload=jnp.asarray(st["payload"]),
+            queue=jnp.asarray(st["queue"]), step=jnp.asarray(st["step"]))
         return drained, batch

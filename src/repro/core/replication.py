@@ -77,6 +77,9 @@ class ReplicaGroup:
 
     # -- control plane: mirrored to every replica ---------------------------
     def _all(self, fn: Callable[[dbs.DBSState], Tuple[dbs.DBSState, Any]]):
+        # default None: value-less mirrored ops (unmap/delete) return None on
+        # every replica — a bare next() would leak StopIteration out of the
+        # generator here (PEP 479 turns that into a RuntimeError in callers)
         outs = []
         for r in self.replicas:
             if not r.healthy:
@@ -84,8 +87,7 @@ class ReplicaGroup:
                 continue
             r.state, out = fn(r.state)
             outs.append(out)
-        first = next(o for o in outs if o is not None)
-        return first
+        return next((o for o in outs if o is not None), None)
 
     def create_volume(self) -> int:
         return int(self._all(dbs.create_volume))
@@ -95,6 +97,10 @@ class ReplicaGroup:
 
     def clone(self, vol: int) -> int:
         return int(self._all(lambda s: dbs.clone(s, jnp.int32(vol))))
+
+    def unmap(self, vol: int, pages: jnp.ndarray) -> None:
+        pages = jnp.asarray(pages, jnp.int32)
+        self._all(lambda s: (dbs.unmap(s, jnp.int32(vol), pages), None))
 
     def delete_volume(self, vol: int) -> None:
         self._all(lambda s: (dbs.delete_volume(s, jnp.int32(vol)), None))
@@ -150,17 +156,22 @@ class ReplicaGroup:
     def read(self, vol, pages: jnp.ndarray, block_offsets: jnp.ndarray
              ) -> jnp.ndarray:
         """Round-robin read from one healthy replica. vol: scalar or (B,)."""
+        if self.null_storage:
+            # no replica serves anything: no resolve dispatch AND no rr
+            # cursor burn (the layer-cut row must not skew the read
+            # distribution real replicas would see — ChainedReplicas.read
+            # holds the same contract)
+            for r in self.replicas:
+                if r.healthy:
+                    return jnp.zeros((pages.shape[0],) + r.pool.shape[2:],
+                                     r.pool.dtype)
+            raise RuntimeError("no healthy replica")
         order = [(self._rr + i) % len(self.replicas)
                  for i in range(len(self.replicas))]
         self._rr += 1
         for i in order:
             r = self.replicas[i]
             if r.healthy:
-                if self.null_storage:
-                    # no resolve dispatch: with storage nulled the extent map
-                    # is never consulted, the ack is zeros of the right shape
-                    return jnp.zeros((pages.shape[0],) + r.pool.shape[2:],
-                                     r.pool.dtype)
                 return _read_jit(r.state, r.pool,
                                  jnp.asarray(vol, jnp.int32), pages,
                                  block_offsets)
@@ -251,9 +262,27 @@ class ShardedReplicaGroup:
             jnp.zeros((n_shards, n_extents + 1, page_blocks)
                       + tuple(payload_shape), dtype)
             for _ in range(n_replicas)]
-        self.healthy = np.ones((n_shards, n_replicas), bool)
+        self._healthy_np = np.ones((n_shards, n_replicas), bool)
         self._healthy_dev: Optional[jnp.ndarray] = None   # device-mask cache
+        self._healthy_stale = False   # device mask newer than the np mirror
         self._rr = jnp.zeros((n_shards,), jnp.int32)
+
+    @property
+    def healthy(self) -> np.ndarray:
+        """Host-side (S, R) health mirror. After in-band FAIL/REBUILD ops
+        (core/ring.py) the *device* mask is authoritative; the mirror
+        refreshes lazily here — host control paths pay the sync, never the
+        pump."""
+        if self._healthy_stale:
+            self._healthy_np = np.asarray(jax.device_get(self._healthy_dev))
+            self._healthy_stale = False
+        return self._healthy_np
+
+    def adopt_health(self, mask: jnp.ndarray) -> None:
+        """Adopt the ring step's returned health mask (device-resident;
+        in-band fail/rebuild mutated it inside the compiled program)."""
+        self._healthy_dev = mask
+        self._healthy_stale = True
 
     # -- control plane (host-side slice/write-back; rare ops) ----------------
     def _shard_op(self, shard: int, fn):
@@ -277,6 +306,19 @@ class ShardedReplicaGroup:
     def snapshot(self, shard: int, vol: int) -> int:
         return int(jax.device_get(self._shard_op(
             shard, lambda s: dbs.snapshot(s, jnp.int32(vol)))))
+
+    def clone(self, shard: int, vol: int) -> int:
+        return int(jax.device_get(self._shard_op(
+            shard, lambda s: dbs.clone(s, jnp.int32(vol)))))
+
+    def unmap(self, shard: int, vol: int, pages: jnp.ndarray) -> None:
+        pages = jnp.asarray(pages, jnp.int32)
+        self._shard_op(shard,
+                       lambda s: (dbs.unmap(s, jnp.int32(vol), pages), None))
+
+    def delete_volume(self, shard: int, vol: int) -> None:
+        self._shard_op(
+            shard, lambda s: (dbs.delete_volume(s, jnp.int32(vol)), None))
 
     # -- fused data plane ----------------------------------------------------
     def device_state(self):

@@ -1,0 +1,760 @@
+"""Unified SQ/CQ ring protocol: ONE opcode-tagged submission path for data
+AND control ops through the fused/sharded step (paper §IV-B/C).
+
+The paper's second pillar restructures the communication protocol between
+the ublk frontend and the replicas into one queue pair carrying everything,
+instead of per-request synchronous hops. PR 1/2 built a fast device-resident
+*data* plane (fused step, vmapped shard pool), but every *control* op —
+snapshot, clone, unmap, delete, replica fail/rebuild — was still a separate
+host-side dispatch that fenced the pump, and each engine spoke its own drain
+protocol. This module is the io_uring-style fix:
+
+- **SQE** — an opcode-tagged submission record (READ / WRITE / SNAPSHOT /
+  CLONE / UNMAP / DELETE / FAIL_REPLICA / REBUILD_REPLICA / NOOP barrier),
+  admitted through the SlotTable like any other request. The Messages Array
+  records each slot's opcode (``slots.SlotTable.opcode``).
+- **CQ** — a device-resident buffer of completion records indexed by slot id
+  (the "payload slot"): status, op result value, op latency in pump ticks,
+  and the read payload. The step scatters a CQE per admitted lane; the host
+  performs its usual single per-pump fetch of the per-lane view.
+- **ring_step_core** — the opcode-dispatched engine iteration: the batched
+  data phase (mirrored CoW writes, rr reads — identical to fused.step_core),
+  then a lane-ordered ``lax.scan`` applying the volume-control tail
+  (``lax.switch`` over op class), then the masked replica-control op against
+  the *traced* health mask. Everything is vmap-safe, so the sharded pool
+  gets in-band control ops for free — per-shard fail/rebuild happens inside
+  the same single jitted program as foreground I/O, no host branch between
+  pumps.
+- **RingFrontend** — THE drain protocol. S shards × Q admission queues, one
+  opcode-aware drain (``drain_ring``). The legacy ``MultiQueueFrontend`` /
+  ``ShardedFrontend`` are thin adapters over it (core/frontend.py).
+- **RingEngine** — ``EngineConfig(comm="ring")``: S engine shards (S=1 runs
+  the program unmapped), pipelined double-buffered pump, one compiled
+  program per (batch geometry, opcode-class signature).
+
+Batch-ordering contract (what makes in-band control bit-exact against the
+host-side sequential reference): within one SQE batch, data lanes precede
+control lanes (the frontend cuts the drain so that once a control op is
+drained only further control ops may join, and a replica op closes the
+batch). The step applies the data phase first, then the control tail in
+lane order — exactly the submission order. Ordering *between* batches is
+program order as always.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbs, slots
+from repro.core.fused import _cow_apply, _rr_gather
+from repro.core.replication import ShardedReplicaGroup
+
+# ---------------------------------------------------------------------------
+# the opcode table (SQE.op) and completion statuses (CQE.status)
+# ---------------------------------------------------------------------------
+OP_NOOP = 0        # barrier: admit + complete, touches nothing
+OP_READ = 1
+OP_WRITE = 2
+OP_SNAPSHOT = 3    # volume-control ops (applied in lane order)
+OP_CLONE = 4
+OP_UNMAP = 5
+OP_DELETE = 6
+OP_FAIL = 7        # replica-control ops (close their batch)
+OP_REBUILD = 8
+
+OP_NAMES = ("NOOP", "READ", "WRITE", "SNAPSHOT", "CLONE", "UNMAP", "DELETE",
+            "FAIL_REPLICA", "REBUILD_REPLICA")
+
+KIND_TO_OP = {"noop": OP_NOOP, "read": OP_READ, "write": OP_WRITE,
+              "snapshot": OP_SNAPSHOT, "clone": OP_CLONE, "unmap": OP_UNMAP,
+              "delete": OP_DELETE, "fail": OP_FAIL, "rebuild": OP_REBUILD}
+
+# opcode classes: which phases of the step a batch needs (static per program)
+KIND_CLASS = {"noop": "noop", "read": "read", "write": "write",
+              "snapshot": "vol", "clone": "vol", "unmap": "vol",
+              "delete": "vol", "fail": "repl", "rebuild": "repl"}
+
+ST_OK = 0          # completed
+ST_ERR = -1        # op rejected (bad volume / snapshot table full / bad arg)
+ST_LAST = -2       # FAIL would lose the shard's last healthy replica
+ST_HEALTHY = -3    # REBUILD target is healthy — nothing to rebuild
+
+# max control ops per batch: the in-program control scan covers a fixed
+# K-lane window (control lanes are contiguous — the drain policy admits only
+# further control ops once one is drained — so a dynamic-slice window at the
+# first control lane sees them all). Small K keeps the scan cheap under
+# vmap, where every lane executes every switch branch.
+CTRL_TAIL = 8
+
+
+# ---------------------------------------------------------------------------
+# SQE / CQ records
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclass
+class SQE:
+    """One fixed-shape submission batch: the opcode-tagged generalisation of
+    ``fused.FusedBatch``. All lane arrays are (B,) ((S, B) stacked), inert
+    padding lanes marked want=False. ``block`` doubles as the replica index
+    for FAIL/REBUILD lanes; ``tick`` is the submission pump tick (latency =
+    completion step - tick + 1)."""
+    want: jnp.ndarray       # (B,) bool
+    op: jnp.ndarray         # (B,) int32 opcode (OP_*)
+    volume: jnp.ndarray     # (B,) int32 shard-local volume (-1 = none)
+    page: jnp.ndarray       # (B,) int32
+    block: jnp.ndarray      # (B,) int32 block offset / replica index
+    payload: jnp.ndarray    # (B, *payload) write payloads
+    queue: jnp.ndarray      # (B,) int32 admission queue
+    tick: jnp.ndarray       # (B,) int32 submission pump tick
+    step: jnp.ndarray       # ()   int32 admission step (this pump's tick)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class CQ:
+    """Device-resident completion records, indexed by slot id (the "payload
+    slot" of the CQE). A slot's record lives until the slot is reacquired —
+    the Messages-Array idiom applied to completions."""
+    status: jnp.ndarray     # (N,) int32 ST_*
+    value: jnp.ndarray      # (N,) int32 op result (snapshot id / clone vol)
+    latency: jnp.ndarray    # (N,) int32 completion latency in pump ticks
+    payload: jnp.ndarray    # (N, *payload) read payload slots
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class CQEView:
+    """The per-lane view of this pump's completion records — what the host's
+    single per-pump ``device_get`` fetches."""
+    ok: jnp.ndarray         # (B,) bool  lane admitted (and thus completed)
+    status: jnp.ndarray     # (B,) int32
+    value: jnp.ndarray      # (B,) int32
+    latency: jnp.ndarray    # (B,) int32
+    reads: jnp.ndarray      # (B, *payload)
+
+
+def make_cq(n_slots: int, payload_shape: Tuple[int, ...] = ()) -> CQ:
+    z = lambda: jnp.zeros((n_slots,), jnp.int32)
+    return CQ(status=z(), value=z(), latency=z(),
+              payload=jnp.zeros((n_slots,) + tuple(payload_shape),
+                                jnp.float32))
+
+
+def make_sharded_cq(n_shards: int, n_slots: int,
+                    payload_shape: Tuple[int, ...] = ()) -> CQ:
+    cq = make_cq(n_slots, payload_shape)
+    return jax.tree.map(
+        lambda x: jnp.tile(x[None], (n_shards,) + (1,) * x.ndim), cq)
+
+
+# ---------------------------------------------------------------------------
+# the opcode-dispatched step
+# ---------------------------------------------------------------------------
+def _apply_vol_ops(states, batch: SQE, ok, value, status):
+    """Apply the SNAPSHOT/CLONE/UNMAP/DELETE tail in lane order.
+
+    A ``lax.scan`` over a ``CTRL_TAIL``-lane window keeps submission-order
+    semantics with a fixed trace structure; each lane is a masked
+    ``lax.switch`` over op class (non-control and padding lanes take the
+    NOOP branch). The window is a dynamic slice anchored at the first
+    control lane — control lanes are contiguous (drain policy) and capped
+    at CTRL_TAIL per batch, so the window covers every one of them without
+    scanning the whole batch. Control ops apply to EVERY replica slice,
+    healthy or not — the lock-step convention of
+    ``ShardedReplicaGroup._shard_op``, which lets rebuild copy metadata
+    wholesale instead of replaying control ops."""
+    b_n = batch.op.shape[0]
+    k = min(CTRL_TAIL, b_n)
+    is_vol = ok & (batch.op >= OP_SNAPSHOT) & (batch.op <= OP_DELETE)
+    start = jnp.clip(jnp.argmax(is_vol), 0, b_n - k)
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, k)
+    op_w, vol_w, page_w = sl(batch.op), sl(batch.volume), sl(batch.page)
+    is_vol_w = sl(is_vol)       # data lanes caught by edge-clamping: masked
+
+    def lane(carry, xs):
+        op, vol, page, live = xs
+        branch = jnp.where(live, op - OP_SNAPSHOT + 1, 0)
+
+        def b_noop(sts):
+            return sts, jnp.int32(-1)
+
+        def each(fn):
+            def b(sts):
+                outs = [fn(st) for st in sts]
+                return tuple(st for st, _ in outs), outs[0][1]
+            return b
+
+        b_snap = each(lambda st: dbs.snapshot(st, vol))
+        b_clone = each(lambda st: dbs.clone(st, vol))
+        b_unmap = each(
+            lambda st: (dbs.unmap(st, vol, page[None]), jnp.int32(-1)))
+        b_delete = each(
+            lambda st: (dbs.delete_volume(st, vol), jnp.int32(-1)))
+        sts, val = jax.lax.switch(
+            branch, [b_noop, b_snap, b_clone, b_unmap, b_delete], carry)
+        return sts, val
+
+    states, vals = jax.lax.scan(
+        lane, states, (op_w, vol_w, page_w, is_vol_w))
+    value = jax.lax.dynamic_update_slice_in_dim(
+        value, jnp.where(is_vol_w, vals, sl(value)), start, axis=0)
+    # snapshot/clone report failure (table full / dead volume) through a
+    # negative result id; unmap/delete are unconditional no-op-on-miss
+    signals = is_vol_w & ((op_w == OP_SNAPSHOT) | (op_w == OP_CLONE))
+    status = jax.lax.dynamic_update_slice_in_dim(
+        status, jnp.where(signals & (vals < 0), ST_ERR, sl(status)),
+        start, axis=0)
+    return states, value, status
+
+
+def _apply_repl_ops(states, pools, healthy, batch: SQE, ok, status):
+    """Apply the (at most one — the frontend closes the batch on it)
+    FAIL/REBUILD lane against the traced health mask.
+
+    FAIL flips the mask bit unless the target is the shard's last healthy
+    replica (→ ST_LAST, mask untouched: an all-failed shard would silently
+    ack writes and fabricate zero reads). REBUILD copies the most-up-to-date
+    healthy replica's state+pool into the target and re-marks it healthy;
+    rebuilding a healthy replica is a protocol error (→ ST_HEALTHY). All of
+    it is traced — in-band failover never leaves the compiled program."""
+    n_rep = len(states)
+    is_repl = ok & ((batch.op == OP_FAIL) | (batch.op == OP_REBUILD))
+    has = jnp.any(is_repl)
+    lane = jnp.argmax(is_repl)                   # first repl lane
+    op = batch.op[lane]
+    arg = batch.block[lane]                      # replica index rides block
+    valid = has & (arg >= 0) & (arg < n_rep)
+    tgt = jnp.clip(arg, 0, n_rep - 1)
+    h = healthy
+    n_h = jnp.sum(h.astype(jnp.int32))
+    tgt_h = h[tgt]
+    do_fail = valid & (op == OP_FAIL) & (~tgt_h | (n_h > 1))
+    rej_last = valid & (op == OP_FAIL) & tgt_h & (n_h <= 1)
+    do_rebuild = valid & (op == OP_REBUILD) & ~tgt_h & (n_h >= 1)
+    rej_healthy = valid & (op == OP_REBUILD) & tgt_h
+
+    # donor = healthy replica with the highest metadata revision
+    revs = jnp.stack([st.revision for st in states])
+    donor = jnp.argmax(jnp.where(h, revs, jnp.int32(-(2 ** 31) + 1)))
+
+    def pick(leaves):                            # donor leaf, traced index
+        out = leaves[0]
+        for r in range(1, n_rep):
+            out = jnp.where(donor == r, leaves[r], out)
+        return out
+
+    donor_state = jax.tree.map(lambda *ls: pick(ls), *states)
+    states = tuple(
+        jax.tree.map(lambda cur, d: jnp.where(do_rebuild & (tgt == r), d, cur),
+                     st, donor_state)
+        for r, st in enumerate(states))
+    if pools:
+        donor_pool = pick(pools)
+        pools = tuple(
+            jnp.where(do_rebuild & (tgt == r), donor_pool, p)
+            for r, p in enumerate(pools))
+
+    new_tgt = jnp.where(do_fail, False, jnp.where(do_rebuild, True, tgt_h))
+    healthy = h.at[tgt].set(jnp.where(has, new_tgt, tgt_h))
+    lane_status = jnp.where(
+        rej_last, ST_LAST,
+        jnp.where(rej_healthy, ST_HEALTHY,
+                  jnp.where(do_fail | do_rebuild, ST_OK, ST_ERR)))
+    b_n = batch.op.shape[0]
+    status = jnp.where((jnp.arange(b_n) == lane) & has, lane_status, status)
+    return states, pools, healthy, status
+
+
+def ring_step_core(table: slots.SlotTable, cq: CQ,
+                   states: Tuple[dbs.DBSState, ...],
+                   pools: Tuple[jnp.ndarray, ...], batch: SQE,
+                   rr: jnp.ndarray, healthy: jnp.ndarray, *,
+                   classes: Tuple[str, ...], null_backend: bool = False,
+                   null_storage: bool = False, cow: str = "pallas"):
+    """One ring iteration, un-jitted (vmap-safe over a leading shard axis).
+
+    ``classes`` (static) names the opcode classes present in this batch
+    ("read" / "write" / "vol" / "repl" / "noop") — the host knows them at
+    drain time, so each signature compiles its own program and a pure-data
+    batch pays exactly the fused step's cost plus the CQE scatter. Returns
+    ``(table', cq', states', pools', healthy', CQEView)``.
+    """
+    table, ids, ok = slots.transact(table, batch.want, batch.volume,
+                                    batch.queue, batch.step,
+                                    opcodes=batch.op)
+    b_n = batch.op.shape[0]
+    status = jnp.zeros((b_n,), jnp.int32)
+    value = jnp.full((b_n,), -1, jnp.int32)
+    reads = jnp.zeros_like(batch.payload)
+
+    if not null_backend and states:
+        if "write" in classes:                   # mirrored CoW data phase
+            wmask = ok & (batch.op == OP_WRITE)
+            bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
+            out_states, out_pools = [], []
+            for i, st in enumerate(states):
+                st, wops = dbs.write_pages(st, batch.volume, batch.page,
+                                           bits, wmask & healthy[i])
+                if not null_storage:
+                    out_pools.append(_cow_apply(pools[i], wops,
+                                                batch.payload, batch.block,
+                                                cow))
+                out_states.append(st)
+            states = tuple(out_states)
+            if not null_storage:
+                pools = tuple(out_pools)
+        if "read" in classes and not null_storage:
+            reads = _rr_gather(states, pools, batch, rr,
+                               ok & (batch.op == OP_READ), reads, healthy)
+        if "vol" in classes:                     # lane-ordered control tail
+            states, value, status = _apply_vol_ops(states, batch, ok,
+                                                   value, status)
+        if "repl" in classes:                    # in-band fail/rebuild
+            states, pools, healthy, status = _apply_repl_ops(
+                states, pools, healthy, batch, ok, status)
+
+    latency = (batch.step - batch.tick + 1).astype(jnp.int32)
+    # CQE emission: one record per admitted lane, at its slot id
+    idx = jnp.where(ok, ids, cq.status.shape[0])
+    cq = CQ(status=cq.status.at[idx].set(status, mode="drop"),
+            value=cq.value.at[idx].set(value, mode="drop"),
+            latency=cq.latency.at[idx].set(latency, mode="drop"),
+            payload=cq.payload.at[idx].set(reads, mode="drop"))
+    # mirror the status into the Messages Array's status lane
+    table = dataclasses.replace(
+        table, status=table.status.at[idx].set(status, mode="drop"))
+    view = CQEView(ok=ok, status=status, value=value, latency=latency,
+                   reads=reads)
+    return table, cq, states, pools, healthy, view
+
+
+def vmap_shards(fn, n_shards: int):
+    """Map ``fn`` over a leading (S,) shard axis. At S=1 the program runs
+    unmapped (squeeze/unsqueeze fuse away): vmap's batched-scatter lowering
+    only costs there — the same trick EnginePool uses (core/sharded.py)."""
+    if n_shards == 1:
+        def unmapped(*args):
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            out = fn(*(sq(a) for a in args))
+            return jax.tree.map(lambda x: x[None], out)
+        return unmapped
+    return lambda *args: jax.vmap(fn)(*args)
+
+
+# ---------------------------------------------------------------------------
+# RingFrontend — THE drain protocol (legacy frontends adapt over it)
+# ---------------------------------------------------------------------------
+class RingFrontend:
+    """S shards × Q admission queues feeding one opcode-tagged SQE drain.
+
+    Requests hash to shards by volume (``volume % S``; replica-control ops
+    carry an explicit ``Request.shard``), then to a queue by request id.
+    ``drain_ring`` pulls up to ``batch`` requests per shard under the
+    batch-ordering contract (module docstring): once a control op is
+    drained only further control ops may join that shard's batch, and a
+    replica op closes it — so "data phase, then control tail in lane order"
+    reproduces submission order exactly.
+
+    The submission tick is stamped on ``Request.tick`` at submit (requeues
+    keep the original tick), giving the CQE its latency in pump ticks.
+    """
+
+    def __init__(self, n_shards: int, n_queues: int, n_slots: int,
+                 batch: int = 64, with_table: bool = True):
+        self.n_shards = n_shards
+        self.n_queues = n_queues
+        self.n_slots = n_slots
+        self.batch = batch
+        self.queues: List[List[collections.deque]] = [
+            [collections.deque() for _ in range(n_queues)]
+            for _ in range(n_shards)]
+        self.table = (slots.make_sharded_table(n_shards, n_slots)
+                      if with_table else None)
+        self.step: List[int] = [0] * n_shards
+
+    def shard_of(self, req) -> int:
+        if getattr(req, "shard", None) is not None:
+            return req.shard % self.n_shards
+        return req.volume % self.n_shards if req.volume >= 0 else 0
+
+    def submit(self, req) -> None:
+        if req.kind not in KIND_TO_OP:
+            raise ValueError(f"unknown request kind {req.kind!r} "
+                             f"(expected one of {sorted(KIND_TO_OP)})")
+        s = self.shard_of(req)
+        req.tick = self.step[s]
+        self.queues[s][req.req_id % self.n_queues].append(req)
+
+    def requeue(self, req) -> None:
+        """Put a not-admitted request back at the front of its queue (its
+        original submission tick is kept, so latency keeps counting)."""
+        self.queues[self.shard_of(req)][req.req_id % self.n_queues].appendleft(
+            req)
+
+    def requeue_all(self, reqs: Sequence[Any]) -> None:
+        """Requeue a completion's not-admitted lanes, back-to-front:
+        admission starves the batch SUFFIX (prefix-sum compaction), and an
+        appendleft in forward order would reverse the starved lanes'
+        relative order in their queues — the ordering contract must survive
+        starvation. Every completer funnels through here."""
+        for req in reversed(list(reqs)):
+            self.requeue(req)
+
+    def depth(self) -> int:
+        return sum(len(q) for qs in self.queues for q in qs)
+
+    def _drain_shard(self, s: int, limit: int) -> List[Any]:
+        """Round-robin drain of one shard under the batch-ordering contract:
+        a data op after a drained control op stays queued for the next
+        batch; a replica-control op closes the batch; at most CTRL_TAIL
+        control ops per batch (the step's in-program scan window).
+
+        The drain never exceeds ``n_slots``: with the transact lifecycle a
+        pump starts with every slot free, so a batch that fits the slot
+        count cannot starve — which is what lets the *pipelined* drain
+        launch iteration N+1 before N's completion without a starved
+        suffix of N re-entering the queues behind N+1 (out of submission
+        order)."""
+        reqs: List[Any] = []
+        ctrl_seen = False
+        n_ctrl = 0
+        limit = min(limit, self.n_slots)
+        tail = min(CTRL_TAIL, limit)
+        qs = [q for q in self.queues[s] if q]
+        while qs and len(reqs) < limit:
+            for q in list(qs):
+                if not q:
+                    qs.remove(q)
+                    continue
+                k = KIND_CLASS[q[0].kind]
+                if ctrl_seen and k not in ("vol", "repl"):
+                    return reqs                  # data after control: cut
+                if k in ("vol", "repl") and n_ctrl >= tail:
+                    return reqs                  # control window full
+                r = q.popleft()
+                reqs.append(r)
+                if k in ("vol", "repl"):
+                    ctrl_seen = True
+                    n_ctrl += 1
+                if k == "repl" or len(reqs) >= limit:
+                    return reqs
+        return reqs
+
+    def _stage(self, payload_shape: Tuple[int, ...] = ()):
+        """Drain every shard and fill host-side numpy lane buffers (ONE
+        device transfer per leaf happens in the caller). Returns
+        (per-shard request lists, staged dict | None, opcode classes)."""
+        drained = [self._drain_shard(s, self.batch)
+                   for s in range(self.n_shards)]
+        if not any(drained):
+            return [], None, set()
+        s_n, b_n = self.n_shards, self.batch
+        stage = {"want": np.zeros((s_n, b_n), bool),
+                 "payload": np.zeros((s_n, b_n) + tuple(payload_shape),
+                                     np.float32),
+                 "step": np.zeros((s_n,), np.int32)}
+        for k in ("op", "volume", "page", "block", "queue", "tick"):
+            stage[k] = np.zeros((s_n, b_n), np.int32)
+        classes: Set[str] = set()
+        for s, reqs in enumerate(drained):
+            stage["step"][s] = self.step[s]
+            if reqs:
+                self.step[s] += 1
+            for i, r in enumerate(reqs):
+                classes.add(KIND_CLASS[r.kind])
+                stage["want"][s, i] = True
+                stage["op"][s, i] = KIND_TO_OP[r.kind]
+                stage["volume"][s, i] = (r.volume // s_n if r.volume >= 0
+                                         else -1)
+                stage["page"][s, i] = r.page
+                stage["block"][s, i] = r.block
+                stage["queue"][s, i] = r.req_id % self.n_queues
+                stage["tick"][s, i] = getattr(r, "tick", 0)
+                if r.payload is not None:
+                    stage["payload"][s, i] = np.asarray(r.payload)
+        return drained, stage, classes
+
+    def drain_ring(self, payload_shape: Tuple[int, ...] = ()):
+        """The unified drain: one stacked (S, B, ...) SQE batch per pump.
+        Returns (per-shard request lists, SQE | None, opcode classes)."""
+        drained, st, classes = self._stage(payload_shape)
+        if st is None:
+            return [], None, set()
+        sqe = SQE(want=jnp.asarray(st["want"]), op=jnp.asarray(st["op"]),
+                  volume=jnp.asarray(st["volume"]),
+                  page=jnp.asarray(st["page"]),
+                  block=jnp.asarray(st["block"]),
+                  payload=jnp.asarray(st["payload"]),
+                  queue=jnp.asarray(st["queue"]),
+                  tick=jnp.asarray(st["tick"]),
+                  step=jnp.asarray(st["step"]))
+        return drained, sqe, classes
+
+
+# ---------------------------------------------------------------------------
+# RingEngine — comm="ring": S shards, one opcode-dispatched program per pump
+# ---------------------------------------------------------------------------
+@dataclass
+class PendingRing:
+    """Completion handle from ``pump_async``: the per-lane CQE view (device
+    futures) plus the host-side request lists that rode the batch."""
+    reqs: List[List[Any]]
+    view: CQEView
+
+
+class RingEngine:
+    """S engine shards behind the opcode-dispatched ring step.
+
+    API-compatible with ``EnginePool`` (create_volume/snapshot/submit/pump/
+    pump_async/drain/completed/read_volume), plus in-band control: snapshot,
+    clone, unmap, delete_volume, fail, rebuild are *ring submissions* that
+    execute inside the same jitted step as foreground I/O. One compiled
+    program exists per (batch geometry, opcode-class signature);
+    ``trace_counts``/``dispatches`` pin that contract in tests.
+    """
+
+    def __init__(self, cfg):
+        if cfg.storage != "dbs":
+            raise ValueError("RingEngine requires storage='dbs'")
+        s = getattr(cfg, "n_shards", 1)
+        if s < 1:
+            raise ValueError(f"n_shards must be >= 1, got {s}")
+        self.cfg = cfg
+        self.n_shards = s
+        self.frontend = RingFrontend(s, cfg.n_queues, cfg.n_slots, cfg.batch)
+        if cfg.null_backend:
+            self.backend = None
+        else:
+            self.backend = ShardedReplicaGroup(
+                s, cfg.n_replicas, cfg.n_extents, cfg.max_volumes,
+                cfg.max_pages, cfg.page_blocks, cfg.payload_shape,
+                null_storage=cfg.null_storage)
+        self.cq = make_sharded_cq(s, cfg.n_slots, cfg.payload_shape)
+        self._cow = (cfg.cow if cfg.cow != "auto" else
+                     ("pallas" if jax.default_backend() == "tpu" else "ref"))
+        self._vol_rr = 0
+        self._ctl_seq = 1 << 30      # control-op request ids (own queue slot)
+        self.completed = 0
+        self.dispatches = 0
+        self.trace_counts: Dict[Tuple[str, ...], int] = {}
+        self._steps: Dict[Tuple[str, ...], Any] = {}
+
+    # ------------------------------------------------------------ programs
+    @staticmethod
+    def _canon(classes: Set[str]) -> Tuple[str, ...]:
+        """Canonical program signature for a drained batch. Each tier
+        includes the cheaper ones (masked lanes are inert), so at most FOUR
+        programs exist per batch geometry — a mixed workload can't trace a
+        program per opcode combination, and heavyweight machinery (the
+        control-tail scan, the rebuild pool copy) is only in the programs
+        that need it."""
+        if "repl" in classes:
+            return ("read", "repl", "vol", "write")
+        if "vol" in classes:
+            return ("read", "vol", "write")
+        if "write" in classes:
+            return ("read", "write")
+        return ("read",)
+
+    def _get_step(self, classes: Set[str]):
+        key = self._canon(classes)
+        if key in self._steps:
+            return self._steps[key], key
+        self.trace_counts.setdefault(key, 0)
+        read_only = key == ("read",)
+        core = partial(ring_step_core, classes=key,
+                       null_backend=self.cfg.null_backend,
+                       null_storage=self.cfg.null_storage, cow=self._cow)
+        mapped = vmap_shards(core, self.n_shards)
+
+        if read_only:
+            # replica state, pools and health are inputs only — returning
+            # them would materialize pass-through copies (fused_step_read's
+            # rationale); only the table and the CQ round-trip.
+            def stepped(table, cq, states, pools, batch, rr, healthy):
+                self.trace_counts[key] += 1
+                table, cq, _, _, _, view = mapped(table, cq, states, pools,
+                                                  batch, rr, healthy)
+                return table, cq, view
+            fn = jax.jit(stepped, donate_argnums=(0, 1))
+        else:
+            def stepped(table, cq, states, pools, batch, rr, healthy):
+                self.trace_counts[key] += 1
+                return mapped(table, cq, states, pools, batch, rr, healthy)
+            fn = jax.jit(stepped, donate_argnums=(0, 1, 2, 3))
+        self._steps[key] = fn
+        return fn, key
+
+    # ------------------------------------------------------------ volumes
+    def create_volume(self) -> int:
+        """Create a volume on the next shard (round-robin placement);
+        global id = local * S + shard, as in EnginePool."""
+        shard = self._vol_rr % self.n_shards
+        self._vol_rr += 1
+        local = 0 if self.backend is None else self.backend.create_volume(shard)
+        return local * self.n_shards + shard
+
+    def read_volume(self, vol: int, pages, block_offsets):
+        """Host read path for verification (the pump serves reads in-band)."""
+        if self.backend is None:
+            raise RuntimeError("null backend holds no volumes")
+        return self.backend.read(vol % self.n_shards, vol // self.n_shards,
+                                 pages, block_offsets)
+
+    # ----------------------------------------------------- in-band control
+    def _control(self, kind: str, *, volume: int = -1, page: int = 0,
+                 block: int = 0, shard: Optional[int] = None):
+        """Submit one control SQE and drain to completion — the synchronous
+        convenience wrapper over the in-band path (callers that want control
+        ops interleaved with foreground traffic submit Requests directly).
+
+        Matches the host-side controllers' error surface: replica-protocol
+        violations raise (like ``ShardedReplicaGroup.fail/rebuild``), while
+        failed snapshot/clone report through a negative result id (like
+        ``dbs.snapshot``/``ReplicaGroup.clone`` and ``EnginePool.clone``)."""
+        from repro.core.frontend import Request
+        r = Request(req_id=self._ctl_seq, kind=kind, volume=volume,
+                    page=page, block=block, shard=shard)
+        self._ctl_seq += 1
+        self.submit(r)
+        self.drain()
+        if r.status == ST_LAST:
+            raise RuntimeError(
+                f"replica {block} is shard {shard}'s last healthy replica; "
+                "failing it would lose the shard's volumes")
+        if r.status == ST_HEALTHY:
+            raise ValueError(f"shard {shard} replica {block} is healthy; "
+                             "only a failed replica can be rebuilt")
+        return r.result
+
+    def snapshot(self, vol: int):
+        """Freeze the volume head — as a ring submission. Returns the
+        (shard-local) snapshot id, -1 on failure (dead volume / table
+        full), like the host-side backends."""
+        return self._control("snapshot", volume=vol)
+
+    def clone(self, vol: int) -> int:
+        """Fork a volume in-band. Returns the new *global* volume id, -1 on
+        failure — the same surface as ``EnginePool.clone``."""
+        out = self._control("clone", volume=vol)
+        return -1 if out is None or out < 0 else out
+
+    def unmap(self, vol: int, pages: Sequence[int]) -> None:
+        """TRIM pages in-band (one SQE per page; they share batches)."""
+        from repro.core.frontend import Request
+        for p in pages:
+            r = Request(req_id=self._ctl_seq, kind="unmap", volume=vol,
+                        page=int(p))
+            self._ctl_seq += 1
+            self.submit(r)
+        self.drain()
+
+    def delete_volume(self, vol: int) -> None:
+        self._control("delete", volume=vol)
+
+    def fail(self, shard: int, replica: int) -> None:
+        """In-band replica failover (raises like the host-side controller
+        on protocol violations, from the CQE status)."""
+        if self.backend is not None:
+            self.backend._check(shard, replica)
+        self._control("fail", shard=shard, block=replica)
+
+    def rebuild(self, shard: int, replica: int) -> None:
+        if self.backend is not None:
+            self.backend._check(shard, replica)
+        self._control("rebuild", shard=shard, block=replica)
+
+    # ------------------------------------------------------------- pumping
+    def submit(self, req) -> None:
+        self.frontend.submit(req)
+
+    def pump_async(self) -> Optional[PendingRing]:
+        """Admit one opcode-tagged batch per shard and launch the ring step;
+        do NOT block. Control lanes execute inside the same program as the
+        data lanes — no host dispatch per control op."""
+        reqs, batch, classes = self.frontend.drain_ring(
+            self.cfg.payload_shape)
+        if batch is None:
+            return None
+        if self.backend is None:
+            states, pools = (), ()
+            healthy = jnp.ones((self.n_shards, 1), bool)
+            rr = jnp.zeros((self.n_shards,), jnp.int32)
+        else:
+            states, pools, healthy = self.backend.device_state()
+            rr = self.backend.bump_rr()
+        step, key = self._get_step(classes)
+        self.dispatches += 1
+        read_only = key == ("read",)
+        if read_only:
+            table, cq, view = step(self.frontend.table, self.cq, states,
+                                   pools, batch, rr, healthy)
+        else:
+            table, cq, states, pools, healthy, view = step(
+                self.frontend.table, self.cq, states, pools, batch, rr,
+                healthy)
+            if self.backend is not None:
+                self.backend.set_device_state(states, pools)
+                if "repl" in key:
+                    # only the repl program can change health; adopting on
+                    # every pump would mark the host mirror stale and make
+                    # each .healthy access pay a device sync for nothing
+                    self.backend.adopt_health(healthy)
+        self.frontend.table = table
+        self.cq = cq
+        return PendingRing(reqs=reqs, view=view)
+
+    def _complete(self, p: PendingRing) -> int:
+        """The pump's single host hop: fetch the per-lane CQE view, deliver
+        result/status/latency, requeue not-admitted requests."""
+        v = p.view
+        ok, status, value, latency, reads = jax.device_get(
+            (v.ok, v.status, v.value, v.latency, v.reads))
+        done = 0
+        requeues = []
+        for s, shard_reqs in enumerate(p.reqs):
+            for i, r in enumerate(shard_reqs):
+                if not ok[s][i]:
+                    requeues.append(r)
+                    continue
+                r.status = int(status[s][i])
+                r.latency = int(latency[s][i])
+                if r.kind == "read":
+                    r.result = reads[s, i]
+                elif r.kind == "snapshot":
+                    r.result = int(value[s][i])
+                elif r.kind == "clone":
+                    local = int(value[s][i])
+                    r.result = (local * self.n_shards + s if local >= 0
+                                else -1)
+                done += 1
+        self.frontend.requeue_all(requeues)
+        self.completed += done
+        return done
+
+    def pump(self) -> int:
+        p = self.pump_async()
+        return self._complete(p) if p is not None else 0
+
+    def drain(self, max_iters: int = 100_000) -> int:
+        """Pipelined drain: launch iteration N+1 before blocking on N
+        (EnginePool's double-buffered completion)."""
+        total = 0
+        pending: Optional[PendingRing] = None
+        for _ in range(max_iters):
+            nxt = self.pump_async()
+            if pending is not None:
+                total += self._complete(pending)
+            pending = nxt
+            if nxt is None and self.frontend.depth() == 0:
+                break
+        if pending is not None:
+            total += self._complete(pending)
+        return total

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.core.frontend import Request, ShardedFrontend
 from repro.core.fused import FusedBatch, step_core, step_core_read
 from repro.core.replication import ShardedReplicaGroup
+from repro.core.ring import vmap_shards
 
 
 @dataclass
@@ -111,17 +112,13 @@ class EnginePool:
             core, key, donate = partial(step_core, cow=self._cow), "step", \
                 (0, 1, 2)
 
+        # same program, unmapped at S=1: vmap only buys the worse batched-
+        # scatter lowering there (ring.vmap_shards, shared with RingEngine)
+        mapped = vmap_shards(partial(core, **kw), self.n_shards)
+
         def stepped(table, states, pools, batch, rr, healthy):
             self.trace_counts[key] += 1
-            fn = partial(core, **kw)
-            if self.n_shards == 1:
-                # same program, unmapped: at S=1 vmap only buys the worse
-                # batched-scatter lowering; squeeze/unsqueeze fuse away
-                sq = lambda t: jax.tree.map(lambda x: x[0], t)
-                out = fn(sq(table), sq(states), sq(pools), sq(batch),
-                         rr[0], healthy[0])
-                return jax.tree.map(lambda x: x[None], out)
-            return jax.vmap(fn)(table, states, pools, batch, rr, healthy)
+            return mapped(table, states, pools, batch, rr, healthy)
         return jax.jit(stepped, donate_argnums=donate)
 
     # ------------------------------------------------------------ volumes
@@ -135,9 +132,31 @@ class EnginePool:
         local = 0 if self.backend is None else self.backend.create_volume(shard)
         return local * self.n_shards + shard
 
-    def snapshot(self, vol: int) -> None:
+    def snapshot(self, vol: int):
+        """Freeze the volume head. Returns the (shard-local) snapshot id,
+        -1 on failure — the same surface as RingEngine.snapshot."""
+        if self.backend is None:
+            return None
+        return self.backend.snapshot(vol % self.n_shards,
+                                     vol // self.n_shards)
+
+    def clone(self, vol: int) -> int:
+        """Fork a volume on its shard. Returns the new global volume id."""
+        if self.backend is None:
+            return -1
+        shard = vol % self.n_shards
+        local = self.backend.clone(shard, vol // self.n_shards)
+        return local * self.n_shards + shard if local >= 0 else -1
+
+    def unmap(self, vol: int, pages) -> None:
         if self.backend is not None:
-            self.backend.snapshot(vol % self.n_shards, vol // self.n_shards)
+            self.backend.unmap(vol % self.n_shards, vol // self.n_shards,
+                               pages)
+
+    def delete_volume(self, vol: int) -> None:
+        if self.backend is not None:
+            self.backend.delete_volume(vol % self.n_shards,
+                                       vol // self.n_shards)
 
     def read_volume(self, vol: int, pages: jnp.ndarray,
                     block_offsets: jnp.ndarray) -> jnp.ndarray:
@@ -185,14 +204,17 @@ class EnginePool:
         payloads, deliver results, requeue not-admitted requests."""
         ok, reads = jax.device_get((p.ok, p.reads))
         done = 0
+        requeues = []
         for s, shard_reqs in enumerate(p.reqs):
             for i, r in enumerate(shard_reqs):
                 if ok[s][i]:
+                    r.status = 0
                     if r.kind == "read":
                         r.result = reads[s, i]
                     done += 1
                 else:
-                    self.frontend.requeue(r)
+                    requeues.append(r)
+        self.frontend.ring.requeue_all(requeues)
         self.completed += done
         return done
 

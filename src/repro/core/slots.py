@@ -95,6 +95,8 @@ class SlotTable:
     volume: jnp.ndarray      # (N,) int32 — DBS volume backing this request
     queue: jnp.ndarray       # (N,) int32 — admission queue the request used
     arrival: jnp.ndarray     # (N,) int32 — admission step (for fairness)
+    opcode: jnp.ndarray      # (N,) int32 — ring opcode of the slot's request
+    status: jnp.ndarray      # (N,) int32 — completion status (CQ mirror)
 
 
 def make_table(n_slots: int) -> SlotTable:
@@ -103,7 +105,8 @@ def make_table(n_slots: int) -> SlotTable:
     # XLA error ("attempt to donate the same buffer twice")
     z = lambda: jnp.zeros((n_slots,), jnp.int32)
     return SlotTable(ring=make_ring(n_slots), active=jnp.zeros((n_slots,), bool),
-                     seq_len=z(), volume=z() - 1, queue=z(), arrival=z())
+                     seq_len=z(), volume=z() - 1, queue=z(), arrival=z(),
+                     opcode=z(), status=z())
 
 
 def make_sharded_table(n_shards: int, n_slots: int) -> SlotTable:
@@ -117,8 +120,13 @@ def make_sharded_table(n_shards: int, n_slots: int) -> SlotTable:
 
 
 def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
-          queues: jnp.ndarray, step: jnp.ndarray):
-    """Admit up to len(want) requests. Returns (table', slot_ids, ok)."""
+          queues: jnp.ndarray, step: jnp.ndarray, opcodes=None):
+    """Admit up to len(want) requests. Returns (table', slot_ids, ok).
+
+    ``opcodes`` (optional (k,) int32) records the ring opcode of each lane
+    in the Messages Array — the SQ half of the SQ/CQ protocol
+    (core/ring.py); omitted lanes record 0 (OP_NOOP).
+    """
     ring, ids, ok = acquire(table.ring, want.shape[0], want)
     # not-admitted lanes scatter out of bounds and are dropped: clamping them
     # to slot 0 would race a lane that legitimately acquired slot 0 (scatter
@@ -133,21 +141,33 @@ def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
         volume=upd(table.volume, volumes),
         queue=upd(table.queue, queues),
         arrival=upd(table.arrival, jnp.broadcast_to(step, ids.shape)),
+        opcode=upd(table.opcode, 0 if opcodes is None else opcodes),
+        status=upd(table.status, 0),
     ), ids, ok
 
 
-def retire(table: SlotTable, ids: jnp.ndarray, mask=None) -> SlotTable:
+def retire(table: SlotTable, ids: jnp.ndarray, mask=None,
+           statuses=None) -> SlotTable:
+    """Release slots. ``statuses`` (optional, aligned with ids) records each
+    slot's completion status in the Messages Array's status lane — the CQ
+    mirror a host-side completer can leave behind (core/ring.py scatters the
+    full CQ record itself)."""
     ok = ids >= 0
     if mask is not None:
         ok = ok & mask
     idx = jnp.where(ok, ids, table.active.shape[0])
     active = table.active.at[idx].set(False, mode="drop")
+    status = table.status
+    if statuses is not None:
+        status = status.at[idx].set(
+            jnp.broadcast_to(statuses, idx.shape).astype(status.dtype),
+            mode="drop")
     return dataclasses.replace(table, ring=release(table.ring, ids, mask),
-                               active=active)
+                               active=active, status=status)
 
 
 def transact(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
-             queues: jnp.ndarray, step: jnp.ndarray):
+             queues: jnp.ndarray, step: jnp.ndarray, opcodes=None):
     """Admit a batch and immediately retire the admitted slots — the fused
     engine's slot lifecycle (see core/fused.py and docs/ARCHITECTURE.md),
     where a request is admitted, executed, and completed inside ONE compiled
@@ -157,5 +177,5 @@ def transact(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
     recorded, starvation behaviour matches the unfused admit/retire pair),
     but no slot id ever crosses to the host. Returns (table', slot_ids, ok).
     """
-    table, ids, ok = admit(table, want, volumes, queues, step)
+    table, ids, ok = admit(table, want, volumes, queues, step, opcodes)
     return retire(table, ids, ok), ids, ok

@@ -31,6 +31,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, ExecutionPlan
 from repro.core import dbs, slots
 from repro.core.frontend import MultiQueueFrontend, Request
+from repro.core.ring import OP_CLONE, ST_OK
 from repro.models import blocks as B
 from repro.models import model as M
 
@@ -101,11 +102,13 @@ class ServeEngine:
         child = GenRequest(req_id=new_req_id,
                            prompt=np.zeros((0,), np.int64), max_new=max_new)
         child.out_tokens = list(src.out_tokens)
-        # claim a slot directly (fork bypasses the admission queue)
+        # claim a slot directly (fork bypasses the admission queue); the
+        # Messages Array records the op that owns the slot (ring opcode lane)
         self.frontend.table, ids, ok = slots.admit(
             self.frontend.table, jnp.array([True]),
             jnp.array([vid], jnp.int32), jnp.array([0], jnp.int32),
-            jnp.int32(self._steps))
+            jnp.int32(self._steps),
+            opcodes=jnp.array([OP_CLONE], jnp.int32))
         if not bool(ok[0]):
             self.state = dbs.delete_volume(self.state, jnp.int32(vid))
             return None
@@ -260,7 +263,8 @@ class ServeEngine:
     def _finish(self, g: GenRequest) -> None:
         g.done = True
         self.frontend.table = slots.retire(
-            self.frontend.table, jnp.asarray([g.slot], jnp.int32))
+            self.frontend.table, jnp.asarray([g.slot], jnp.int32),
+            statuses=jnp.int32(ST_OK))
         self.state = dbs.delete_volume(self.state, jnp.int32(g.volume))
         self.slot_vol[g.slot] = -1
         g.slot = -1

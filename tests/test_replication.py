@@ -32,6 +32,19 @@ def test_null_storage_read_dispatches_nothing(monkeypatch):
     assert calls == [], f"null-storage read dispatched {len(calls)} resolves"
 
 
+def test_null_storage_read_leaves_rr_alone():
+    """Null-storage reads consult no replica, so they must not burn the
+    round-robin cursor either — the layer-cut row would otherwise skew the
+    read distribution the real replicas see (ChainedReplicas.read holds
+    the same contract; see tests/test_ring.py)."""
+    g = _group(null_storage=True)
+    vol = g.create_volume()
+    before = g._rr
+    g.read(vol, jnp.arange(4, dtype=jnp.int32), jnp.zeros((4,), jnp.int32))
+    g.read(vol, jnp.arange(4, dtype=jnp.int32), jnp.zeros((4,), jnp.int32))
+    assert g._rr == before
+
+
 def test_null_storage_read_matches_real_read_shape():
     real = _group()
     null = _group(null_storage=True)
