@@ -7,8 +7,13 @@
 #   fused.py        single-program fused engine step (admit->CoW->complete)
 #   sharded.py      EnginePool: S shards, one vmapped step, pipelined pump
 #   ring.py         SQ/CQ ring protocol: opcode-tagged data+control ops
-#   engine.py       the composed engine + upstream baseline + null layers
+#   backends.py     the backend registry (loop/slots/fused/sharded/ring/...)
+#   engine.py       the Engine façade + upstream baseline + null layers
+#   blockdev.py     ublk-style public API: VolumeManager/Volume, byte I/O
 from repro.core import dbs, ring, slots  # noqa: F401
+from repro.core.backends import (Backend, available_backends,  # noqa: F401
+                                 make_backend, register_backend)
+from repro.core.blockdev import IOFuture, Volume, VolumeManager  # noqa: F401
 from repro.core.engine import Engine, EngineConfig, UpstreamEngine  # noqa: F401
 from repro.core.frontend import (MultiQueueFrontend, Request,  # noqa: F401
                                  ShardedFrontend, UpstreamFrontend)

@@ -1,0 +1,477 @@
+"""The ublk-style public block-device API: byte-addressed async volumes.
+
+This is the repo's analogue of the paper's third pillar — the **ublk
+frontend** that exposes the optimized engine as a plain virtual block
+device, so consumers never see slot tables, SQE batches or page/block
+geometry. Callers open a ``VolumeManager`` (which owns one registered
+engine backend — core/backends.py — and its pump loop), get ``Volume``
+handles, and issue **byte-addressed asynchronous I/O**:
+
+    mgr = VolumeManager(backend="ring", n_shards=4)
+    vol = mgr.create()
+    fut = vol.pwrite(4096, b"hello")       # async: an IOFuture
+    assert vol.read(4096, 5) == b"hello"   # sync convenience wrapper
+
+Byte -> page translation (one ``Volume`` spans ``max_pages`` DBS pages):
+
+    block_bytes = payload_elems          # one engine payload lane = 1 block
+    page_bytes  = page_blocks * block_bytes
+    byte off    -> page  off // page_bytes,
+                   block (off % page_bytes) // block_bytes
+
+Each byte is carried in one float32 payload lane (values 0..255 are exact in
+float32, so round-trips are bit-faithful on every backend). **Aligned spans
+map straight onto batched block ops**: one ``pwrite``/``pread`` fans out to
+one SQE per covered block, they ride the engine's normal admission batches,
+and complete on the pump's single CQ fetch — the API adds no host hops.
+**Unaligned edges** take an in-API read-modify-write path: the partial edge
+blocks are read back synchronously (ordered behind every in-flight op),
+merged on the host, and written as whole blocks.
+
+Ordering semantics (standard for async block devices — NVMe/ublk give no
+ordering between in-flight commands either, but this API is stricter where
+it is free to be):
+
+- per volume, **submission order is execution order** for write->read,
+  write->write (disjoint blocks), and anything->control: a volume's
+  requests ride one admission queue, batches apply writes before reads and
+  data before control, and the manager routes control ops through the same
+  stream (in-band SQEs on ``backend="ring"``, flush-then-host-dispatch
+  elsewhere),
+- **overlapping-block hazards** (a write racing an in-flight read or write
+  of the same block) are detected by the manager and fenced with a flush,
+  so even adversarial interleavings keep sequential semantics.
+
+``discard`` TRIMs: fully-covered pages are unmapped (in-band ``UNMAP`` SQEs
+on the ring), partial edge spans are zero-filled through the RMW write
+path; reads of discarded or never-written bytes return zeros (the engines'
+hole-masked read path).
+
+Snapshot/clone are volume-granular: ``vol.snapshot()`` freezes the head,
+``vol.clone()`` forks a CoW copy whose writes diverge extent-by-extent.
+
+The manager's geometry parameters mirror ``EngineConfig``; ``backend=``
+names any registered backend ("loop" | "slots" | "fused" | "sharded" |
+"ring" | "upstream" | "host"). See docs/ARCHITECTURE.md ("Public API").
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import Engine, EngineConfig
+from repro.core.frontend import Request
+
+
+def _bytes_to_lanes(data: bytes) -> np.ndarray:
+    """One byte per float32 payload lane (0..255 — exact in float32)."""
+    return np.frombuffer(data, np.uint8).astype(np.float32)
+
+
+def _lanes_to_bytes(arr) -> bytes:
+    return np.asarray(arr).astype(np.uint8).tobytes()
+
+
+class IOFuture:
+    """Completion handle for one byte-addressed I/O call.
+
+    Wraps the engine ``Request`` fan-out of a single ``pread``/``pwrite``/
+    ``discard``: ``done()`` polls the requests' completion statuses,
+    ``result()`` drives the manager's pump loop until complete and returns
+    the call's value (``bytes`` for reads, the byte count for writes and
+    discards). Raises ``OSError`` if any constituent op completed with a
+    non-OK status."""
+
+    __slots__ = ("_mgr", "_reqs", "_assemble", "_value")
+
+    def __init__(self, mgr: "VolumeManager", reqs: List[Request],
+                 assemble: Optional[Callable[[], Any]] = None,
+                 value: Any = None):
+        self._mgr = mgr
+        self._reqs = reqs
+        self._assemble = assemble
+        self._value = value
+
+    def done(self) -> bool:
+        return all(r.status is not None for r in self._reqs)
+
+    def latency(self) -> int:
+        """Max completion latency (pump ticks) across the fan-out."""
+        return max((r.latency or 0 for r in self._reqs), default=0)
+
+    def result(self) -> Any:
+        if not self.done():
+            self._mgr.flush()
+        if not self.done():
+            raise RuntimeError("I/O did not complete after a full drain")
+        bad = [r for r in self._reqs if r.status != 0]
+        if bad:
+            raise OSError(f"{bad[0].kind} failed with status {bad[0].status} "
+                          f"(volume {bad[0].volume}, page {bad[0].page})")
+        return self._assemble() if self._assemble is not None else self._value
+
+
+class Volume:
+    """A byte-addressed block-device handle (one DBS volume)."""
+
+    def __init__(self, mgr: "VolumeManager", vid: int):
+        self.mgr = mgr
+        self.vid = vid
+
+    # -- async byte I/O -----------------------------------------------------
+    def pread(self, off: int, nbytes: int) -> IOFuture:
+        return self.mgr.pread(self.vid, off, nbytes)
+
+    def pwrite(self, off: int, data: bytes) -> IOFuture:
+        return self.mgr.pwrite(self.vid, off, data)
+
+    def discard(self, off: int, nbytes: int) -> IOFuture:
+        return self.mgr.discard(self.vid, off, nbytes)
+
+    def flush(self) -> None:
+        self.mgr.flush()
+
+    # -- sync convenience wrappers -------------------------------------------
+    def read(self, off: int, nbytes: int) -> bytes:
+        return self.pread(off, nbytes).result()
+
+    def write(self, off: int, data: bytes) -> int:
+        return self.pwrite(off, data).result()
+
+    # -- volume lifecycle -----------------------------------------------------
+    def snapshot(self):
+        """Freeze the volume head; returns the snapshot id (backends whose
+        stores don't name snapshots return None)."""
+        return self.mgr.snapshot(self.vid)
+
+    def clone(self) -> Optional["Volume"]:
+        return self.mgr.clone(self.vid)
+
+    def delete(self) -> None:
+        self.mgr.delete(self.vid)
+
+    @property
+    def capacity(self) -> int:
+        return self.mgr.capacity
+
+    @property
+    def block_bytes(self) -> int:
+        return self.mgr.block_bytes
+
+    @property
+    def page_bytes(self) -> int:
+        return self.mgr.page_bytes
+
+    def __repr__(self):
+        return (f"Volume(vid={self.vid}, capacity={self.capacity}B, "
+                f"backend={self.mgr.backend_name!r})")
+
+
+class VolumeManager:
+    """Owns one registered engine backend and hands out ``Volume`` handles.
+
+    ``backend`` names a registry entry (core/backends.py); engine geometry
+    kwargs mirror ``EngineConfig``. The manager owns the pump loop: every
+    data op is submitted asynchronously and completed by ``flush()`` /
+    ``IOFuture.result()`` driving the backend's (pipelined, single-fetch)
+    drain.
+
+    Per-volume ordering: all of a volume's requests are routed onto one
+    admission queue (request ids are minted so ``req_id % n_queues`` is a
+    function of the volume), which — together with the engines'
+    writes-before-reads-before-control batch phases — makes submission
+    order execution order. Overlapping-block write hazards are fenced with
+    a flush (module docstring).
+    """
+
+    def __init__(self, backend: str = "ring", *, n_shards: int = 1,
+                 n_replicas: int = 2, payload_elems: int = 64,
+                 page_blocks: int = 32, n_extents: int = 1024,
+                 max_volumes: int = 16, max_pages: int = 256,
+                 n_queues: int = 4, n_slots: int = 256, batch: int = 64,
+                 storage: str = "dbs", null_backend: bool = False,
+                 null_storage: bool = False, cow: str = "auto"):
+        self.engine = Engine(EngineConfig(
+            comm=backend, n_shards=n_shards, n_replicas=n_replicas,
+            payload_shape=(payload_elems,), page_blocks=page_blocks,
+            n_extents=n_extents, max_volumes=max_volumes,
+            max_pages=max_pages, n_queues=n_queues, n_slots=n_slots,
+            batch=batch, storage=storage, null_backend=null_backend,
+            null_storage=null_storage, cow=cow))
+        self.backend_name = backend
+        self.block_bytes = payload_elems
+        self.page_blocks = page_blocks
+        self.page_bytes = page_blocks * payload_elems
+        self.capacity = max_pages * self.page_bytes
+        self._nq = max(1, n_queues)
+        self._ns = max(1, n_shards)
+        self._seq = itertools.count()
+        # control ops ride the data stream when the backend's submission
+        # path accepts them (the ring); otherwise they fence host-side
+        self._inband = "snapshot" in self.engine.data_kinds
+        # the hot-path submit: the manager only mints valid data kinds, so
+        # aligned spans go straight to the backend's frontend (the same
+        # queues Engine.submit feeds, minus the per-request kind check)
+        fe = self.engine.frontend
+        self._fast_submit = (fe.submit if fe is not None
+                             else self.engine.impl.submit)
+        self.volumes: Dict[int, Volume] = {}
+        # per-volume in-flight absolute-block sets, for the
+        # overlapping-write hazard fence (O(span) per op; the counter
+        # makes the no-traffic fence check O(1))
+        self._pending_w: Dict[int, set] = {}
+        self._pending_r: Dict[int, set] = {}
+        self._n_pending = 0
+
+    # ------------------------------------------------------------ plumbing
+    def _rid(self, vid: int) -> int:
+        """Mint a request id that pins this volume's stream to one admission
+        queue of its shard (``req_id % n_queues`` is volume-determined), so
+        per-volume FIFO survives the round-robin drain."""
+        return next(self._seq) * self._nq + (vid // self._ns) % self._nq
+
+    def _vid(self, vol) -> int:
+        return vol.vid if isinstance(vol, Volume) else int(vol)
+
+    def _check_span(self, off: int, nbytes: int) -> None:
+        if off < 0 or nbytes < 0 or off + nbytes > self.capacity:
+            raise ValueError(f"byte span [{off}, {off + nbytes}) outside "
+                             f"device capacity {self.capacity}")
+
+    def _fence_write(self, vid: int, lo: int, hi: int) -> None:
+        """A write overlapping an in-flight read or write of the same block
+        must not share its batch window — flush first (sequential
+        semantics; disjoint-block and same-page traffic needs no fence)."""
+        pw = self._pending_w.get(vid)
+        pr = self._pending_r.get(vid)
+        if pw is None and pr is None:
+            return
+        span = range(lo, hi)
+        if ((pw and not pw.isdisjoint(span))
+                or (pr and not pr.isdisjoint(span))):
+            self.flush()
+
+    def _track(self, table: Dict[int, set], vid: int, lo: int,
+               hi: int) -> None:
+        self._n_pending += 1
+        s = table.get(vid)
+        if s is None:
+            table[vid] = set(range(lo, hi))
+        else:
+            s.update(range(lo, hi))
+
+    def submit(self, req: Request) -> None:
+        """Raw request-level escape hatch (validated at the backend's
+        submission boundary)."""
+        self.engine.submit(req)
+
+    def pump(self) -> int:
+        done = self.engine.pump()
+        if self._n_pending and self.engine.depth() == 0:
+            # queues empty after a pump => every submitted op completed:
+            # drop the hazard tracking so incremental pump() callers don't
+            # accumulate stale blocks (and spurious fences) until a flush
+            self._pending_w.clear()
+            self._pending_r.clear()
+            self._n_pending = 0
+        return done
+
+    def drain(self) -> int:
+        return self.flush()
+
+    def flush(self) -> int:
+        """Complete everything in flight (the backends' pipelined drain —
+        one device fetch per pump). Returns the number of completions."""
+        done = self.engine.drain()
+        if self._n_pending:
+            self._pending_w.clear()
+            self._pending_r.clear()
+            self._n_pending = 0
+        return done
+
+    def stats(self) -> Dict[str, Any]:
+        out = {"completed": self.engine.completed,
+               "queued": self.engine.depth(),
+               "backend": self.backend_name}
+        table = getattr(self.engine.frontend, "table", None)
+        if table is not None:
+            from repro.core import slots
+            out["slots_active"] = int(np.asarray(slots.n_active(table)))
+        return out
+
+    # ------------------------------------------------------------ lifecycle
+    def create(self) -> Volume:
+        vid = self.engine.create_volume()
+        if vid is None or vid < 0:
+            raise RuntimeError("volume table full")
+        vol = Volume(self, vid)
+        self.volumes[vid] = vol
+        return vol
+
+    def open(self, vid: int) -> Volume:
+        return self.volumes.get(vid) or self.volumes.setdefault(
+            vid, Volume(self, vid))
+
+    def _control_sync(self, kind: str, vid: int, **kw):
+        """One control op, ordered behind the volume's in-flight stream:
+        in-band SQE through the volume's own queue on the ring, host-side
+        dispatch behind a flush elsewhere. Drains to completion either way."""
+        if self._inband and kind in ("snapshot", "clone", "delete"):
+            r = Request(req_id=self._rid(vid), kind=kind, volume=vid)
+            self.engine.submit(r)
+            self.flush()
+            return r.result
+        self.flush()
+        return self.engine.control(kind, volume=vid, **kw)
+
+    def snapshot(self, vol) -> Any:
+        return self._control_sync("snapshot", self._vid(vol))
+
+    def clone(self, vol) -> Optional[Volume]:
+        """Fork a CoW copy; returns the new Volume (None on failure)."""
+        new_vid = self._control_sync("clone", self._vid(vol))
+        if new_vid is None or new_vid < 0:
+            return None
+        child = Volume(self, new_vid)
+        self.volumes[new_vid] = child
+        return child
+
+    def delete(self, vol) -> None:
+        vid = self._vid(vol)
+        self._control_sync("delete", vid)
+        self.volumes.pop(vid, None)
+
+    # ------------------------------------------------------------ byte I/O
+    def pread(self, vol, off: int, nbytes: int) -> IOFuture:
+        vid = self._vid(vol)
+        self._check_span(off, nbytes)
+        if nbytes == 0:
+            return IOFuture(self, [], value=b"")
+        bb, pb = self.block_bytes, self.page_blocks
+        first, last = off // bb, (off + nbytes - 1) // bb
+        reqs = []
+        submit = self._fast_submit
+        for ab in range(first, last + 1):
+            r = Request(req_id=self._rid(vid), kind="read", volume=vid,
+                        page=ab // pb, block=ab % pb)
+            submit(r)
+            reqs.append(r)
+        self._track(self._pending_r, vid, first, last + 1)
+        head = off - first * bb
+
+        def assemble() -> bytes:
+            if len(reqs) == 1:                   # fast path: one block
+                r = reqs[0]
+                lanes = (np.zeros(bb, np.float32) if r.result is None
+                         else np.asarray(r.result))
+                return _lanes_to_bytes(lanes)[head:head + nbytes]
+            parts = [np.zeros(bb, np.float32) if r.result is None
+                     else np.asarray(r.result, np.float32) for r in reqs]
+            return _lanes_to_bytes(np.concatenate(parts))[head:head + nbytes]
+        return IOFuture(self, reqs, assemble=assemble)
+
+    def _read_span_sync(self, vid: int, off: int, nbytes: int) -> bytes:
+        fut = self.pread(vid, off, nbytes)
+        return fut.result()          # drains: ordered behind all in-flight
+
+    def pwrite(self, vol, off: int, data) -> IOFuture:
+        vid = self._vid(vol)
+        data = bytes(data)
+        n = len(data)
+        self._check_span(off, n)
+        if n == 0:
+            return IOFuture(self, [], value=0)
+        bb, pb = self.block_bytes, self.page_blocks
+        first, last = off // bb, (off + n - 1) // bb
+        head = off - first * bb
+        tail = (last + 1) * bb - (off + n)
+        if head or tail:
+            # in-API read-modify-write: fetch the partial edge blocks
+            # synchronously (the read drains behind every in-flight op, so
+            # it observes the volume's full submission history), merge the
+            # new bytes in, and write whole blocks. A span inside ONE block
+            # has both edges in that block: one read covers both.
+            span = bytearray((last - first + 1) * bb)
+            if first == last:
+                span[:] = self._read_span_sync(vid, first * bb, bb)
+            else:
+                if head:
+                    span[:bb] = self._read_span_sync(vid, first * bb, bb)
+                if tail:
+                    span[-bb:] = self._read_span_sync(vid, last * bb, bb)
+            span[head:head + n] = data
+            data = span
+        if self._n_pending:
+            self._fence_write(vid, first, last + 1)
+        submit = self._fast_submit
+        if first == last:                        # fast path: one block
+            r = Request(req_id=self._rid(vid), kind="write", volume=vid,
+                        page=first // pb, block=first % pb,
+                        payload=_bytes_to_lanes(data))
+            submit(r)
+            reqs = [r]
+        else:
+            view = memoryview(data)
+            reqs = []
+            for i, ab in enumerate(range(first, last + 1)):
+                r = Request(req_id=self._rid(vid), kind="write", volume=vid,
+                            page=ab // pb, block=ab % pb,
+                            payload=_bytes_to_lanes(
+                                view[i * bb:(i + 1) * bb]))
+                submit(r)
+                reqs.append(r)
+        self._track(self._pending_w, vid, first, last + 1)
+        return IOFuture(self, reqs, value=n)
+
+    def discard(self, vol, off: int, nbytes: int) -> IOFuture:
+        """TRIM ``[off, off+nbytes)``: fully covered pages are unmapped
+        (extents freed — in-band UNMAP SQEs on the ring), partial edges are
+        zero-filled through the write path. Reads of the span return zeros
+        afterwards."""
+        vid = self._vid(vol)
+        self._check_span(off, nbytes)
+        if nbytes == 0:
+            return IOFuture(self, [], value=0)
+        pby = self.page_bytes
+        end = off + nbytes
+        first_full = -(-off // pby)              # ceil
+        last_full = end // pby
+        reqs: List[Request] = []
+        if first_full < last_full:
+            pages = list(range(first_full, last_full))
+            if self._inband:
+                for p in pages:
+                    r = Request(req_id=self._rid(vid), kind="unmap",
+                                volume=vid, page=p)
+                    self.engine.submit(r)
+                    reqs.append(r)
+            else:
+                self.flush()                     # order: behind in-flight ops
+                self.engine.unmap(vid, pages)
+            edges = [(off, first_full * pby), (last_full * pby, end)]
+        else:
+            edges = [(off, end)]
+        for a, b in edges:
+            if b > a:
+                reqs.extend(self.pwrite(vid, a, b"\x00" * (b - a))._reqs)
+        return IOFuture(self, reqs, value=nbytes)
+
+    # ------------------------------------- embedder control-plane passthrough
+    @property
+    def state(self):
+        """The backing DBSState (``backend="host"`` only) — the control
+        plane embedders read block tables from (serving/engine.py)."""
+        return self.engine.impl.state
+
+    def alloc_pages(self, vols, pages, mask=None, bits=None):
+        """Page-granular allocation/CoW on the host backend's state; returns
+        the DBS ``WriteOps`` for an external data plane (serving KV pools)."""
+        return self.engine.impl.alloc_pages(vols, pages, mask=mask,
+                                            bits=bits)
+
+    def __repr__(self):
+        return (f"VolumeManager(backend={self.backend_name!r}, "
+                f"block_bytes={self.block_bytes}, "
+                f"page_bytes={self.page_bytes}, capacity={self.capacity})")

@@ -1,0 +1,44 @@
+"""The control-plane verb set shared by every registered backend.
+
+``ControlDispatch`` maps the uniform ``control(kind, ...)`` surface of the
+backend protocol (core/backends.py) onto the concrete class's named
+methods — ``snapshot``/``clone``/``unmap``/``delete_volume`` for the
+volume ops, ``_control_repl`` for the replica ops (``fail``/``rebuild``),
+which backends without replicas leave at the raising default. One dispatch
+ladder, subclassed five ways, instead of five drifting copies.
+
+Deliberately dependency-free: ring.py, sharded.py, engine.py and
+backends.py all mix it in, and any pair of those importing each other at
+module level would cycle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+CONTROL_KINDS = ("snapshot", "clone", "unmap", "delete", "fail", "rebuild")
+
+
+class ControlDispatch:
+    """Mixin: the backend protocol's ``control()`` verb dispatch."""
+
+    def control(self, kind: str, *, volume: int = -1, pages=None,
+                shard: Optional[int] = None, replica: int = -1):
+        """Uniform control-plane dispatch (``backends.Backend.control``):
+        in-band ring submissions on the ring backend, host-side calls
+        elsewhere — whatever the concrete class's named methods do."""
+        if kind == "snapshot":
+            return self.snapshot(volume)
+        if kind == "clone":
+            return self.clone(volume)
+        if kind == "unmap":
+            return self.unmap(volume, pages if pages is not None else [])
+        if kind == "delete":
+            return self.delete_volume(volume)
+        if kind in ("fail", "rebuild"):
+            return self._control_repl(kind, shard, replica)
+        raise ValueError(f"unknown control op {kind!r} "
+                         f"(expected one of {CONTROL_KINDS})")
+
+    def _control_repl(self, kind: str, shard: Optional[int], replica: int):
+        raise ValueError(
+            f"{type(self).__name__} has no {kind!r} control op")

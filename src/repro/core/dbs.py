@@ -195,38 +195,71 @@ def read_resolve(st: DBSState, vol: jnp.ndarray, pages: jnp.ndarray
     return st.table[vol, pages]
 
 
+def _group_lanes(vol: jnp.ndarray, pages: jnp.ndarray,
+                 block_bits: jnp.ndarray, mask: jnp.ndarray, max_pages: int):
+    """Group write lanes that target the same (vol, page) pair.
+
+    Returns (leader (B,) int32 — the first live lane of each group,
+    is_leader (B,) bool, group_bits (B,) uint32 — the OR of the group's
+    block bitmaps, meaningful on leader lanes). The (B, B) comparison is
+    tiny next to the extent pools and keeps everything vmap-safe.
+    """
+    b = pages.shape[0]
+    volb = jnp.broadcast_to(vol, pages.shape).astype(jnp.int32)
+    key = volb * jnp.int32(max_pages) + pages
+    same = mask[:, None] & mask[None, :] & (key[:, None] == key[None, :])
+    leader = jnp.argmax(same, axis=1).astype(jnp.int32)
+    is_leader = mask & (leader == jnp.arange(b, dtype=jnp.int32))
+    group_bits = jax.lax.reduce(
+        jnp.where(same, block_bits[None, :], jnp.uint32(0)),
+        jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    return leader, is_leader, group_bits
+
+
 def write_pages(st: DBSState, vol: jnp.ndarray, pages: jnp.ndarray,
                 block_bits: jnp.ndarray, mask=None):
     """Write blocks in (possibly new) pages.
 
     vol: scalar volume id, or (B,) vector (one volume per lane — the serving
     engine's "one write per active sequence per step"). pages: (B,) page
-    indices, unique per (vol, page) pair; block_bits: (B,) uint32 masks of
-    blocks written. Returns (state, WriteOps) where WriteOps tells the data
-    plane which extents to touch and which CoW copies to perform.
+    indices; block_bits: (B,) uint32 masks of blocks written. Returns
+    (state, WriteOps) where WriteOps tells the data plane which extents to
+    touch and which CoW copies to perform.
+
+    Lanes targeting the same (vol, page) pair are GROUPED: the group's first
+    live lane (the leader) resolves allocation/CoW once with the OR of the
+    group's block bitmaps, and every member lane inherits the leader's
+    destination extent — so a byte-addressed span that fans out to many
+    blocks of one page (core/blockdev.py) is one allocation plus N block
+    stores, exactly like the sequential one-write-per-call reference.
+    Duplicate (vol, page, *block*) lanes remain undefined-order (scatter
+    semantics); callers serialize overlapping-block writes across batches.
     """
     vol = jnp.asarray(vol)
     if mask is None:
         mask = jnp.ones(pages.shape, bool)
+    leader, is_leader, group_bits = _group_lanes(
+        vol, pages, block_bits, mask, st.table.shape[1])
     head = st.vol_head[vol]                                     # scalar or (B,)
     ext = st.table[vol, pages]                                  # (B,)
     owner = jnp.where(ext >= 0, st.extent_owner[jnp.maximum(ext, 0)], NULL)
-    in_place = (ext >= 0) & (owner == head) & mask
-    need_alloc = mask & ~in_place                               # hole or CoW
+    in_place = (ext >= 0) & (owner == head) & is_leader
+    need_alloc = is_leader & ~in_place                          # hole or CoW
     ring, new_ids, got = acquire(st.free, pages.shape[0], need_alloc)
     dst = jnp.where(in_place, ext, new_ids)                     # -1 if starved
-    ok = (in_place | got) & mask
+    ok = (in_place | got) & is_leader
     is_cow = ok & (~in_place) & (ext >= 0)
 
     safe_dst = jnp.maximum(dst, 0)
     old_bits = jnp.where(is_cow, st.bitmap[jnp.maximum(ext, 0)], jnp.uint32(0))
     new_bits = (st.bitmap[safe_dst] * in_place.astype(jnp.uint32)
-                | old_bits | block_bits)
+                | old_bits | group_bits)
     # lanes that perform no write scatter to an out-of-bounds index and are
     # dropped: a write-back of the "current" value is NOT inert when another
     # lane targets the same slot in the batch (duplicate-index scatter order
     # is undefined, so the stale write-back can win) — e.g. the fused step
-    # routes read lanes through here with mask=False.
+    # routes read lanes through here with mask=False, and only group leaders
+    # may touch the metadata scatters at all.
     drop_ext = jnp.where(ok, safe_dst, st.n_extents)
     drop_page = jnp.where(ok, pages, st.table.shape[1])
     st = dataclasses.replace(
@@ -236,9 +269,14 @@ def write_pages(st: DBSState, vol: jnp.ndarray, pages: jnp.ndarray,
         bitmap=st.bitmap.at[drop_ext].set(new_bits, mode="drop"),
         table=st.table.at[vol, drop_page].set(dst, mode="drop"),
     )
-    ops = WriteOps(dst=jnp.where(ok, dst, NULL),
+    # expand leader results to every member lane: the data plane stores each
+    # lane's block into its group's destination extent (one CoW copy per
+    # group — cow_src stays leader-only)
+    ok_all = mask & ok[leader]
+    dst_all = dst[leader]
+    ops = WriteOps(dst=jnp.where(ok_all, dst_all, NULL),
                    cow_src=jnp.where(is_cow, ext, NULL),
-                   ok=ok)
+                   ok=ok_all)
     return _bump(st), ops
 
 
@@ -260,14 +298,15 @@ def apply_write_ops(pool: jnp.ndarray, ops: WriteOps,
     """
     safe_dst = jnp.maximum(ops.dst, 0)
     safe_src = jnp.maximum(ops.cow_src, 0)
-    do_copy = ops.cow_src >= 0
-    # broadcast the (B,) CoW mask over the extent (B, page, ...) trailing
-    # dims (reshape keeps this Python-3.10 compatible); failed lanes scatter
-    # out of bounds and are dropped — see the note in write_pages.
-    ext_mask = do_copy.reshape(do_copy.shape + (1,) * (pool.ndim - 1))
+    do_copy = (ops.cow_src >= 0) & ops.ok
+    # only COPY lanes touch the whole-extent scatter: a write-back of the
+    # "current" extent value is NOT inert when another lane of the batch
+    # shares the destination (grouped same-page writes, see write_pages) —
+    # the stale write-back could clobber the leader's CoW copy. Failed and
+    # non-copy lanes scatter out of bounds and are dropped.
+    drop_copy = jnp.where(do_copy, safe_dst, pool.shape[0])
+    pool = pool.at[drop_copy].set(pool[safe_src], mode="drop")
     drop_dst = jnp.where(ops.ok, safe_dst, pool.shape[0])
-    copied = jnp.where(ext_mask, pool[safe_src], pool[safe_dst])
-    pool = pool.at[drop_dst].set(copied, mode="drop")
     pool = pool.at[drop_dst, block_offsets].set(payload, mode="drop")
     return pool
 

@@ -1,34 +1,33 @@
-"""The engine: frontend -> controller -> replicas(DBS), per paper Fig. 2/3.
+"""The engine façade + the upstream baseline, per paper Fig. 2/3.
 
-``Engine`` composes the three optimized layers; ``UpstreamEngine`` is the
-faithful baseline (single-loop frontend, per-request dispatch, chained
-snapshot lookup on reads) so the benchmark ladder can reproduce Tables I/II.
+``Engine`` is a THIN FAÇADE over the backend registry (core/backends.py):
+``EngineConfig.comm`` names a registered backend (loop | slots | fused |
+sharded | ring | upstream | host), ``make_backend`` builds it, and every
+engine method delegates — there is no comm string branching here anymore.
+The public block-device API (core/blockdev.py ``VolumeManager``) drives the
+same registry with byte-addressed async I/O; ``Engine`` keeps the
+request-level surface alive for the ladder and the legacy tests.
+
+``UpstreamEngine`` is the faithful baseline (single-loop frontend,
+per-request dispatch, chained snapshot lookup on reads) so the benchmark
+ladder can reproduce Tables I/II; it also satisfies the backend protocol
+(registered as ``"upstream"``).
 
 Null-layer switches implement the paper's §IV-A methodology:
   null_backend  — requests complete at the controller (frontend-only run)
   null_storage  — replicas ack without touching DBS (no-storage run)
 
-``comm="fused"`` routes pump() through the single-program fused step
-(core/fused.py); ``comm="ring"`` through the opcode-tagged SQ/CQ ring
-protocol (core/ring.py), where ``snapshot``/``clone``/``unmap``/
-``delete_volume``/``fail``/``rebuild`` become ring submissions executed
-in-band with foreground I/O. Pipeline and ladder columns:
-docs/ARCHITECTURE.md.
+Pipeline and ladder columns: docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import dbs
-from repro.core.frontend import MultiQueueFrontend, Request, UpstreamFrontend
-from repro.core.fused import fused_step, fused_step_read
-from repro.core.replication import ReplicaGroup
+from repro.core.control import ControlDispatch
+from repro.core.frontend import Request, UpstreamFrontend
 
 
 @dataclass
@@ -45,263 +44,101 @@ class EngineConfig:
     null_backend: bool = False
     null_storage: bool = False
     storage: str = "dbs"         # dbs | chained (sparse-file-style baseline)
-    comm: str = "slots"          # slots (Messages Array) | loop (per-request)
+    comm: str = "slots"          # a REGISTERED BACKEND name (core/backends):
+                                 # slots (Messages Array) | loop (per-request)
                                  # | fused (single-program step, core/fused.py)
                                  # | sharded (vmapped EnginePool, core/sharded.py)
                                  # | ring (opcode-tagged SQ/CQ, core/ring.py)
+                                 # | upstream (TGT-style baseline)
+                                 # | host (sequential host-state oracle)
     cow: str = "auto"            # CoW data plane for comm="fused"/"sharded":
                                  # auto (pallas on TPU, ref elsewhere)
                                  # | pallas (force the dbs_copy kernel)
                                  # | ref (apply_write_ops gather/scatter)
-    n_shards: int = 1            # engine shards for comm="sharded"
+    n_shards: int = 1            # engine shards for comm="sharded"/"ring"
 
 
 class Engine:
-    """Modified engine: multi-queue frontend + slot comm + DBS replicas.
+    """Thin façade over a registered backend (core/backends.py).
 
-    ``storage="chained"`` swaps the replica backing store for the sparse-
-    file-style snapshot-chain store, and ``comm="loop"`` serializes request
-    handling through a per-request registry — the two knobs that let the
-    benchmark ladder reproduce the paper's cumulative columns.
+    Construction resolves ``cfg.comm`` through the registry; submission,
+    pumping and control ops delegate to the backend. Legacy attribute
+    surface is preserved: ``.pool`` is the backend itself when it is a
+    shard pool (sharded/ring), ``.frontend`` the backend's frontend, and
+    ``.backend`` the replica storage (``ReplicaGroup``/
+    ``ShardedReplicaGroup``/``ChainedReplicas``/None) — so pre-registry
+    call sites (``eng.pool.backend.fail(...)``, ``eng.backend.read(...)``)
+    keep working unchanged.
     """
 
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg
-        if cfg.comm in ("fused", "sharded", "ring") and cfg.storage != "dbs":
-            raise ValueError(f"comm={cfg.comm!r} requires storage='dbs'")
         if cfg.cow not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown cow impl {cfg.cow!r} "
                              "(expected auto | pallas | ref)")
-        if cfg.comm in ("sharded", "ring"):
-            # the whole engine is the pool: S shards, one vmapped step
-            # (comm="ring" adds the opcode-dispatched SQ/CQ protocol, so
-            # control ops ride the same program as data I/O)
-            if cfg.comm == "ring":
-                from repro.core.ring import RingEngine
-                self.pool = RingEngine(cfg)
-            else:
-                from repro.core.sharded import EnginePool
-                self.pool = EnginePool(cfg)
-            self.frontend = self.pool.frontend
-            self.backend = self.pool.backend
-            self._cow = self.pool._cow
-            return
-        self.pool = None
-        self.frontend = MultiQueueFrontend(cfg.n_queues, cfg.n_slots, cfg.batch)
-        if cfg.null_backend:
-            self.backend = None
-        elif cfg.storage == "chained":
-            self.backend = ChainedReplicas(cfg)
-        else:
-            self.backend = ReplicaGroup(
-                cfg.n_replicas, cfg.n_extents, cfg.max_volumes, cfg.max_pages,
-                cfg.page_blocks, cfg.payload_shape,
-                null_storage=cfg.null_storage)
-        self._cow = (cfg.cow if cfg.cow != "auto" else
-                     ("pallas" if jax.default_backend() == "tpu" else "ref"))
-        self.completed = 0
+        from repro.core.backends import make_backend
+        self._impl = make_backend(cfg.comm, cfg)
+        self.pool = (self._impl if getattr(self._impl, "is_pool", False)
+                     else None)
+        self.frontend = self._impl.frontend
+        self.backend = self._impl.storage
+        self._cow = getattr(self._impl, "_cow", None)
+
+    @property
+    def impl(self):
+        """The registered backend instance behind this façade."""
+        return self._impl
+
+    @property
+    def data_kinds(self):
+        """Request kinds the backend's submission boundary accepts."""
+        return self._impl.data_kinds
 
     @property
     def completed(self) -> int:
-        return self.pool.completed if self.pool is not None else self._completed
+        return self._impl.completed
 
     @completed.setter
     def completed(self, v: int) -> None:
-        if self.pool is not None:
-            self.pool.completed = v
-        else:
-            self._completed = v
+        self._impl.completed = v
 
     def create_volume(self) -> int:
-        if self.pool is not None:
-            return self.pool.create_volume()
-        if self.backend is None:
-            return 0
-        return self.backend.create_volume()
+        return self._impl.create_volume()
 
-    # -- control plane (comm="ring": in-band ring submissions; other comms:
-    # host-side dispatch to the backend) ------------------------------------
+    # -- control plane: uniform dispatch through the backend's control()
+    # (in-band ring submissions on backend="ring"; host-side elsewhere) ------
     def snapshot(self, vol: int):
-        if self.pool is not None:
-            return self.pool.snapshot(vol)
-        if self.backend is not None:
-            return self.backend.snapshot(vol)
-        return None
+        return self._impl.control("snapshot", volume=vol)
 
     def clone(self, vol: int) -> int:
-        if self.pool is not None:
-            return self.pool.clone(vol)
-        if self.backend is None:
-            return -1
-        return self.backend.clone(vol)
+        return self._impl.control("clone", volume=vol)
 
     def unmap(self, vol: int, pages) -> None:
-        if self.pool is not None:
-            self.pool.unmap(vol, pages)
-        elif self.backend is not None:
-            self.backend.unmap(vol, pages)
+        self._impl.control("unmap", volume=vol, pages=pages)
 
     def delete_volume(self, vol: int) -> None:
-        if self.pool is not None:
-            self.pool.delete_volume(vol)
-        elif self.backend is not None:
-            self.backend.delete_volume(vol)
+        self._impl.control("delete", volume=vol)
+
+    def control(self, kind: str, **kw) -> Any:
+        """Raw control-plane passthrough (snapshot/clone/unmap/delete/fail/
+        rebuild — see ``backends.Backend.control``)."""
+        return self._impl.control(kind, **kw)
 
     def submit(self, req: Request) -> None:
-        if self.cfg.comm != "ring" and req.kind not in ("read", "write"):
-            raise ValueError(
-                f"kind={req.kind!r} requests need comm='ring' (the opcode-"
-                "tagged SQ/CQ path); other comm modes carry data ops only")
-        self.frontend.submit(req)
+        # validation happens at the backend's submission boundary — BEFORE
+        # any enqueue, so mixed-kind batches never lose innocent data
+        # requests to a drain-time rejection
+        self._impl.submit(req)
 
-    def _exec_write_batch(self, rs: List[Request]) -> None:
-        if self.cfg.storage == "chained":
-            for r in rs:
-                self.backend.write(r.volume, [r.page], [r.block],
-                                   [r.payload])
-            return
-        # fixed-shape vectorized write (padded to the admission batch)
-        n, cap = len(rs), self.cfg.batch
-        pad = cap - (n % cap) if n % cap else 0
-        vols = jnp.asarray([r.volume for r in rs] + [0] * pad, jnp.int32)
-        pages = jnp.asarray([r.page for r in rs] + [0] * pad, jnp.int32)
-        offs = jnp.asarray([r.block for r in rs] + [0] * pad, jnp.int32)
-        payload = jnp.stack(
-            [r.payload if r.payload is not None
-             else jnp.zeros(self.cfg.payload_shape) for r in rs]
-            + [jnp.zeros(self.cfg.payload_shape)] * pad)
-        mask = jnp.arange(n + pad) < n
-        for i in range(0, n + pad, cap):
-            s = slice(i, i + cap)
-            self.backend.write(vols[s], pages[s], offs[s], payload[s],
-                               mask=mask[s])
-
-    def _pump_fused(self) -> int:
-        """One controller iteration as ONE compiled program (core/fused.py).
-
-        The host drains raw request arrays in, launches ``fused_step``, and
-        performs exactly one ``device_get`` — at completion, to learn which
-        lanes were admitted and to carry read payloads out. Between admission
-        and completion nothing crosses the host: the slot table, replica
-        DBS states and payload pools round-trip device-side.
-        """
-        reqs, batch = self.frontend.drain_batch(self.cfg.payload_shape)
-        if not reqs:
-            return 0
-        if self.backend is None:
-            states, pools = (), ()
-            rr = 0
-        else:
-            states, pools = self.backend.device_state()
-            rr = self.backend.bump_rr()
-        if any(r.kind == "write" for r in reqs):
-            table, states, pools, ok, reads = fused_step(
-                self.frontend.table, states, pools, batch, rr,
-                null_backend=self.cfg.null_backend,
-                null_storage=self.cfg.null_storage, cow=self._cow)
-            if self.backend is not None:
-                self.backend.set_device_state(states, pools)
-        else:
-            # read-only batch: replica state is untouched, so dispatch the
-            # input-only variant (no pool pass-through copies)
-            table, ok, reads = fused_step_read(
-                self.frontend.table, states, pools, batch, rr,
-                null_backend=self.cfg.null_backend,
-                null_storage=self.cfg.null_storage)
-        self.frontend.table = table
-        # the single host hop: completion flags + completed read payloads
-        ok_host, reads_host = jax.device_get((ok, reads))
-        done = 0
-        requeues = []
-        for i, r in enumerate(reqs):
-            if ok_host[i]:
-                r.status = 0
-                if r.kind == "read":
-                    r.result = reads_host[i]
-                done += 1
-            else:
-                requeues.append(r)
-        self.frontend.ring.requeue_all(requeues)
-        self.completed += done
-        return done
+    def depth(self) -> int:
+        return self._impl.depth()
 
     def pump(self) -> int:
-        """One controller iteration: admit a batch, execute it against the
-        replicas (writes mirrored / reads round-robin), complete the slots.
-        Returns the number of completed requests."""
-        if self.pool is not None:
-            return self.pool.pump()
-        if self.cfg.comm == "fused":
-            return self._pump_fused()
-        slot_ids, reqs = self.frontend.poll_batch()
-        if not reqs:
-            return 0
-        if self.backend is not None:
-            if self.cfg.comm == "loop":
-                # the single loop function: one request at a time
-                for r in reqs:
-                    if r.kind == "write":
-                        self._exec_write_batch([r])
-                    else:
-                        out = self.backend.read(
-                            r.volume, jnp.asarray([r.page], jnp.int32),
-                            jnp.asarray([r.block], jnp.int32))
-                        if out is not None:
-                            r.result = np.asarray(jax.device_get(out))[0]
-            else:
-                writes = [r for r in reqs if r.kind == "write"]
-                reads = [r for r in reqs if r.kind == "read"]
-                if writes:
-                    self._exec_write_batch(writes)
-                if reads:
-                    if self.cfg.storage == "chained":
-                        out = self.backend.read(
-                            [r.volume for r in reads],
-                            [r.page for r in reads],
-                            [r.block for r in reads])
-                        if out is not None:
-                            for r, v in zip(reads, out):
-                                r.result = v
-                    else:
-                        n, cap = len(reads), self.cfg.batch
-                        pad = cap - (n % cap) if n % cap else 0
-                        vols = jnp.asarray(
-                            [r.volume for r in reads] + [0] * pad, jnp.int32)
-                        pages = jnp.asarray(
-                            [r.page for r in reads] + [0] * pad, jnp.int32)
-                        offs = jnp.asarray(
-                            [r.block for r in reads] + [0] * pad, jnp.int32)
-                        for i in range(0, n + pad, cap):
-                            s = slice(i, i + cap)
-                            out = self.backend.read(vols[s], pages[s],
-                                                    offs[s])
-                            # one fetch per chunk, host indexing after:
-                            # per-lane out[j] would put O(B) tiny device
-                            # gathers on the pump (and deliver device
-                            # arrays where every other comm mode delivers
-                            # host numpy)
-                            out = np.asarray(jax.device_get(out))
-                            for j, r in enumerate(reads[i:i + cap]):
-                                r.result = out[j]
-        done = self.frontend.complete(slot_ids)
-        for r in done:
-            # unified completion semantics across comm modes: every
-            # completed request carries a status (0 = OK), and reads carry
-            # their payload in ``result`` (see ring.CQ / tests/test_ring.py)
-            r.status = 0
-        self.completed += len(done)
-        return len(done)
+        """One backend iteration. Returns the number of completions."""
+        return self._impl.pump()
 
     def drain(self, max_iters: int = 100_000) -> int:
-        if self.pool is not None:
-            return self.pool.drain(max_iters)     # pipelined double-buffer
-        n = 0
-        for _ in range(max_iters):
-            got = self.pump()
-            if got == 0 and self.frontend.depth() == 0:
-                break
-            n += got
-        return n
+        return self._impl.drain(max_iters)
 
 
 class ChainedReplicas:
@@ -435,8 +272,17 @@ class ChainedStore:
         return None
 
 
-class UpstreamEngine:
-    """TGT-style frontend + loop-function dispatch + chained sparse store."""
+class UpstreamEngine(ControlDispatch):
+    """TGT-style frontend + loop-function dispatch + chained sparse store.
+
+    Registered as ``backend="upstream"`` (core/backends.py): the measured
+    baseline satisfies the same protocol as every optimized backend, so the
+    public block-device API can run byte-for-byte equivalence against it.
+    """
+
+    is_pool = False
+    data_kinds = frozenset({"read", "write"})
+    storage = None                  # no replica-group-shaped storage object
 
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg
@@ -447,20 +293,48 @@ class UpstreamEngine:
         self._rr = 0
         self.completed = 0
 
-    def create_volume(self) -> int:
-        if self.stores is None:
-            return 0
-        ids = [s.create_volume() for s in self.stores]
+    def _agree(self, ids) -> int:
         if len(set(ids)) != 1:          # same hazard as ChainedReplicas
             raise RuntimeError(f"replica stores diverged on id: {ids}")
         return ids[0]
+
+    def create_volume(self) -> int:
+        if self.stores is None:
+            return 0
+        return self._agree([s.create_volume() for s in self.stores])
 
     def snapshot(self, vol: int) -> None:
         if self.stores is not None:
             for s in self.stores:
                 s.snapshot(vol)
 
+    def clone(self, vol: int) -> int:
+        if self.stores is None:
+            return -1
+        return self._agree([s.clone(vol) for s in self.stores])
+
+    def unmap(self, vol: int, pages) -> None:
+        if self.stores is not None:
+            for s in self.stores:
+                for p in pages:
+                    s.unmap(vol, int(p))
+
+    def delete_volume(self, vol: int) -> None:
+        if self.stores is not None:
+            for s in self.stores:
+                s.delete_volume(vol)
+
+    def depth(self) -> int:
+        return len(self.frontend)
+
     def submit(self, req: Request) -> None:
+        # submission-boundary validation: historically the upstream path
+        # enqueued ANY kind and silently executed it as a read — validate
+        # before enqueue like every registered backend
+        if req.kind not in self.data_kinds:
+            raise ValueError(
+                f"kind={req.kind!r} requests need backend='ring'; the "
+                "upstream baseline carries data ops only")
         self.frontend.submit(req)
 
     def pump(self) -> int:

@@ -60,16 +60,22 @@ class UpstreamFrontend:
         self.messages: Dict[int, Request] = {}      # the Messages Map
         self._next_id = itertools.count()
         self.max_inflight = max_inflight
+        self.step = 0               # pump tick (latency accounting)
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        req.tick = self.step        # unified latency semantics: every comm
+        self.queue.append(req)      # mode stamps submission in pump ticks
 
     def poll_one(self) -> Optional[Tuple[int, Request]]:
         """The loop function: take ONE request, assign a unique id, store it
-        in the map. Sequential by construction (the paper's bottleneck)."""
+        in the map. Sequential by construction (the paper's bottleneck).
+        Each poll is one pump tick; the popped request's ``latency`` is
+        stamped in ticks, like the ring CQE's."""
         if not self.queue or len(self.messages) >= self.max_inflight:
             return None
         req = self.queue.popleft()
+        req.latency = self.step - req.tick + 1
+        self.step += 1
         mid = next(self._next_id)
         self.messages[mid] = req
         return mid, req

@@ -158,11 +158,20 @@ def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None):
     this form vmap-safe (and is no extra cost under vmap, where a batched
     switch would execute all branches anyway).
     """
+    def _hole_masked(ext, got):
+        # holes (ext < 0: never-written or unmapped pages) read as ZEROS —
+        # without the mask the clamped gather would leak extent 0's payload
+        # (sparse-file semantics; core/blockdev.py relies on this for
+        # byte-level equivalence with a zero-filled device)
+        m = (ext >= 0).reshape(ext.shape + (1,) * (got.ndim - ext.ndim))
+        return jnp.where(m, got, 0)
+
     if healthy is None:
         def _read_from(i):
             def branch(_):
                 ext = dbs.read_resolve(states[i], batch.volume, batch.page)
-                return pools[i][jnp.maximum(ext, 0), batch.block]
+                return _hole_masked(ext, pools[i][jnp.maximum(ext, 0),
+                                                  batch.block])
             return branch
         vals = jax.lax.switch(rr % len(states),
                               [_read_from(i) for i in range(len(states))], 0)
@@ -173,8 +182,9 @@ def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None):
         vals = jnp.zeros_like(reads)
         for i in range(len(states)):
             ext = dbs.read_resolve(states[i], batch.volume, batch.page)
-            vals = jnp.where(sel[i], pools[i][jnp.maximum(ext, 0),
-                                              batch.block], vals)
+            vals = jnp.where(sel[i],
+                             _hole_masked(ext, pools[i][jnp.maximum(ext, 0),
+                                                        batch.block]), vals)
     return jnp.where(rmask.reshape(rmask.shape + (1,) * (vals.ndim - 1)),
                      vals, reads)
 

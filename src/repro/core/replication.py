@@ -42,7 +42,12 @@ _apply_jit = jax.jit(dbs.apply_write_ops)
 @jax.jit
 def _read_jit(state, pool, vol, pages, block_offsets):
     ext = dbs.read_resolve(state, vol, pages)
-    return pool[jnp.maximum(ext, 0), block_offsets]
+    got = pool[jnp.maximum(ext, 0), block_offsets]
+    # holes (never-written / unmapped pages) read as zeros — the clamped
+    # gather would otherwise leak extent 0's payload (fused._rr_gather holds
+    # the same contract; core/blockdev.py byte equivalence relies on it)
+    return jnp.where((ext >= 0).reshape(ext.shape + (1,) * (got.ndim - 1)),
+                     got, 0)
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dbs, slots
+from repro.core.control import ControlDispatch
 from repro.core.fused import _cow_apply, _rr_gather
 from repro.core.replication import ShardedReplicaGroup
 
@@ -439,6 +440,11 @@ class RingFrontend:
                 if k in ("vol", "repl") and n_ctrl >= tail:
                     return reqs                  # control window full
                 r = q.popleft()
+                # provisional latency in pump ticks, stamped at drain (the
+                # unified semantics across every comm mode — requeued lanes
+                # are re-stamped on their next drain, and the ring path's CQE
+                # overwrites with the identical in-program value)
+                r.latency = self.step[s] - getattr(r, "tick", 0) + 1
                 reqs.append(r)
                 if k in ("vol", "repl"):
                     ctrl_seen = True
@@ -509,7 +515,7 @@ class PendingRing:
     view: CQEView
 
 
-class RingEngine:
+class RingEngine(ControlDispatch):
     """S engine shards behind the opcode-dispatched ring step.
 
     API-compatible with ``EnginePool`` (create_volume/snapshot/submit/pump/
@@ -518,7 +524,13 @@ class RingEngine:
     execute inside the same jitted step as foreground I/O. One compiled
     program exists per (batch geometry, opcode-class signature);
     ``trace_counts``/``dispatches`` pin that contract in tests.
+
+    Registered as ``backend="ring"`` in core/backends.py — the only backend
+    whose submission path (``data_kinds``) accepts control opcodes.
     """
+
+    is_pool = True
+    data_kinds = frozenset(KIND_TO_OP)
 
     def __init__(self, cfg):
         if cfg.storage != "dbs":
@@ -671,8 +683,25 @@ class RingEngine:
             self.backend._check(shard, replica)
         self._control("rebuild", shard=shard, block=replica)
 
+    # -------------------------------------------------- backend protocol
+    @property
+    def storage(self):
+        """The replica storage behind this backend (core/backends.py)."""
+        return self.backend
+
+    def _control_repl(self, kind, shard, replica):
+        # in-band FAIL/REBUILD SQEs (ControlDispatch.control routes here)
+        fn = self.fail if kind == "fail" else self.rebuild
+        return fn(shard, replica)
+
+    def depth(self) -> int:
+        return self.frontend.depth()
+
     # ------------------------------------------------------------- pumping
     def submit(self, req) -> None:
+        if req.kind not in self.data_kinds:
+            raise ValueError(f"unknown request kind {req.kind!r} "
+                             f"(expected one of {sorted(self.data_kinds)})")
         self.frontend.submit(req)
 
     def pump_async(self) -> Optional[PendingRing]:

@@ -38,6 +38,7 @@ from typing import Any, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.control import ControlDispatch
 from repro.core.frontend import Request, ShardedFrontend
 from repro.core.fused import FusedBatch, step_core, step_core_read
 from repro.core.replication import ShardedReplicaGroup
@@ -54,7 +55,7 @@ class PendingPump:
     reads: jnp.ndarray             # (S, B, *payload) (device future)
 
 
-class EnginePool:
+class EnginePool(ControlDispatch):
     """S engine shards behind one vmapped fused step with a pipelined pump.
 
     API-compatible with ``Engine`` for the ladder/tests surface
@@ -66,7 +67,14 @@ class EnginePool:
     (i.e. how many distinct compiled programs exist) and ``dispatches`` how
     many pump launches they served — the "one compiled program serves all S
     shards per pump" contract, pinned by tests/test_sharded.py.
+
+    Registered as ``backend="sharded"`` in core/backends.py: the submission
+    path carries data ops only (``data_kinds``); control ops go host-side
+    through ``control()`` between pumps.
     """
+
+    is_pool = True
+    data_kinds = frozenset({"read", "write"})
 
     def __init__(self, cfg, n_shards: Optional[int] = None):
         self.cfg = cfg
@@ -166,8 +174,30 @@ class EnginePool:
         return self.backend.read(vol % self.n_shards, vol // self.n_shards,
                                  pages, block_offsets)
 
+    # -------------------------------------------------- backend protocol
+    @property
+    def storage(self):
+        """The replica storage behind this backend (core/backends.py).
+        Every control op here is a host-side call between pumps — the
+        fence the ring backend exists to remove (ControlDispatch)."""
+        return self.backend
+
+    def _control_repl(self, kind, shard, replica):
+        if self.backend is None:
+            raise RuntimeError("null backend holds no replicas")
+        fn = self.backend.fail if kind == "fail" else self.backend.rebuild
+        return fn(shard, replica)
+
+    def depth(self) -> int:
+        return self.frontend.depth()
+
     # ------------------------------------------------------------- pumping
     def submit(self, req: Request) -> None:
+        if req.kind not in self.data_kinds:
+            raise ValueError(
+                f"kind={req.kind!r} requests need backend='ring' (the "
+                "opcode-tagged SQ/CQ path); this backend carries data ops "
+                "only — use control() for host-side control ops")
         self.frontend.submit(req)
 
     def pump_async(self) -> Optional[PendingPump]:

@@ -166,6 +166,13 @@ def retire(table: SlotTable, ids: jnp.ndarray, mask=None,
                                active=active, status=status)
 
 
+def n_active(table: SlotTable) -> jnp.ndarray:
+    """Slots currently owned (device-side; sums over every leading shard
+    axis). The Messages-Array occupancy counter behind
+    ``blockdev.VolumeManager.stats`` and queue-depth introspection."""
+    return jnp.sum(table.active.astype(jnp.int32))
+
+
 def transact(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
              queues: jnp.ndarray, step: jnp.ndarray, opcodes=None):
     """Admit a batch and immediately retire the admitted slots — the fused

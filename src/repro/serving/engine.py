@@ -5,14 +5,18 @@ One running engine = one "Longhorn node":
 - admission goes through the **multi-queue frontend** (ublk analogue),
 - live requests own **slots** in a fixed SlotTable (Messages Array) — the
   decode batch is always the full slot array, inactive lanes masked,
-- each request's KV state is a **DBS volume**: pages allocated from the
-  device pool by ``dbs.write_pages`` (control plane) as the sequence crosses
-  page boundaries; the DBS flattened extent map *is* the block table the
-  attention gather reads through,
-- **forking** a session is ``dbs.clone`` — prefix pages shared, diverging
-  writes copy-on-write through the ``dbs_copy`` data plane (one copy per
-  layer pool),
-- completion retires the slot and ``dbs.delete_volume`` frees the extents.
+- each request's KV state is a **DBS volume** owned by a
+  ``blockdev.VolumeManager`` over the ``"host"`` control-plane backend:
+  cache pages are allocated through ``VolumeManager.alloc_pages`` (DBS
+  ``write_pages`` underneath) as the sequence crosses page boundaries, and
+  the manager's flattened extent map *is* the block table the attention
+  gather reads through — the KV pools are the *external data plane* the
+  returned ``WriteOps`` drive,
+- **forking** a session is ``VolumeManager.clone`` — prefix pages shared,
+  diverging writes copy-on-write through the ``dbs_copy`` data plane (one
+  copy per layer pool),
+- completion retires the slot and ``VolumeManager.delete`` frees the
+  extents.
 
 Single-host execution here (smoke/bench scale); the multi-pod data plane of
 the same decode step is exercised by launch/dryrun.py via shard_map.
@@ -29,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ExecutionPlan
-from repro.core import dbs, slots
+from repro.core import slots
+from repro.core.blockdev import VolumeManager
 from repro.core.frontend import MultiQueueFrontend, Request
 from repro.core.ring import OP_CLONE, ST_OK
 from repro.models import blocks as B
@@ -62,10 +67,15 @@ class ServeEngine:
 
         self.frontend = MultiQueueFrontend(n_queues, n_slots, batch=n_slots)
         # DBS metadata: volumes = sessions; extents shared across layers
-        # (every layer pool is indexed by the same extent ids).
+        # (every layer pool is indexed by the same extent ids). The volume
+        # lifecycle + page allocation goes through the public API's
+        # control-plane backend — the KV pools below are the external data
+        # plane its WriteOps drive (core/blockdev.py, core/backends.py).
         n_extents = n_slots * self.n_pages * 2 + 8   # headroom for forks/CoW
-        self.state = dbs.make_state(n_extents, max_volumes=2 * n_slots,
-                                    max_pages=self.n_pages)
+        self.volumes = VolumeManager(
+            backend="host", null_storage=True, n_extents=n_extents,
+            max_volumes=2 * n_slots, max_pages=self.n_pages,
+            page_blocks=page, payload_elems=1)
         self.caches = M.init_cache(cfg, n_slots, max_len, paged=True,
                                    dtype=jnp.dtype(self.plan.compute_dtype))
         # paged pools must span the DBS extent space
@@ -74,6 +84,12 @@ class ServeEngine:
         self.slot_vol = np.full((n_slots,), -1, np.int64)
         self.live: Dict[int, GenRequest] = {}
         self._steps = 0
+
+    @property
+    def state(self):
+        """The DBS metadata behind the session volumes (VolumeManager-owned;
+        ``state.table`` is the paged-attention block table)."""
+        return self.volumes.state
 
     def _grow_pool(self, cache, n_extents):
         if cache is None or "pool_k" not in cache:
@@ -95,10 +111,10 @@ class ServeEngine:
         src = self.live.get(req_id)
         if src is None or src.slot < 0:
             return None
-        self.state, vid = dbs.clone(self.state, jnp.int32(src.volume))
-        vid = int(vid)
-        if vid < 0:
+        child_vol = self.volumes.clone(src.volume)
+        if child_vol is None:
             return None
+        vid = child_vol.vid
         child = GenRequest(req_id=new_req_id,
                            prompt=np.zeros((0,), np.int64), max_new=max_new)
         child.out_tokens = list(src.out_tokens)
@@ -110,7 +126,7 @@ class ServeEngine:
             jnp.int32(self._steps),
             opcodes=jnp.array([OP_CLONE], jnp.int32))
         if not bool(ok[0]):
-            self.state = dbs.delete_volume(self.state, jnp.int32(vid))
+            self.volumes.delete(vid)
             return None
         child.slot = int(ids[0])
         child.volume = vid
@@ -126,18 +142,17 @@ class ServeEngine:
         for sid, r in zip(jax.device_get(slot_ids), reqs):
             g: GenRequest = r.payload
             g.slot = int(sid)
-            self.state, vid = dbs.create_volume(self.state)
-            g.volume = int(vid)
+            g.volume = self.volumes.create().vid
             self.slot_vol[g.slot] = g.volume
             self.live[g.req_id] = g
             admitted.append(g)
         return admitted
 
     def _alloc_pages(self, vols, pages, mask):
-        """Control plane: allocate/CoW the page each lane writes this step."""
-        bits = jnp.ones(pages.shape, jnp.uint32)  # page-granular tracking
-        self.state, ops = dbs.write_pages(self.state, vols, pages, bits,
-                                          mask=mask)
+        """Control plane: allocate/CoW the page each lane writes this step —
+        through the VolumeManager; the returned WriteOps drive this engine's
+        external data plane (the per-layer KV pools)."""
+        ops = self.volumes.alloc_pages(vols, pages, mask=mask)
         if bool(jax.device_get(jnp.any(ops.cow_src >= 0))):
             from repro.kernels.dbs_copy import dbs_copy
             for i, c in enumerate(self.caches):
@@ -265,7 +280,7 @@ class ServeEngine:
         self.frontend.table = slots.retire(
             self.frontend.table, jnp.asarray([g.slot], jnp.int32),
             statuses=jnp.int32(ST_OK))
-        self.state = dbs.delete_volume(self.state, jnp.int32(g.volume))
+        self.volumes.delete(g.volume)
         self.slot_vol[g.slot] = -1
         g.slot = -1
 

@@ -1,0 +1,360 @@
+"""The ublk-style public block-device API (core/blockdev.py) and the
+backend registry (core/backends.py).
+
+Contracts (ISSUE 4 acceptance):
+
+1. **byte equivalence** — interleavings of byte-level ``pread``/``pwrite``/
+   ``discard``/``snapshot``/``clone``/``delete`` through ``Volume`` are
+   bit-identical to a host bytearray reference AND to the ``ChainedStore``
+   reference walk, parametrized over every registered backend.
+2. **single-dispatch contract through the API** — driving the ring backend
+   via ``VolumeManager`` keeps one compiled program per batch-class
+   signature and one device fetch per pump (the test_ring dispatch tests,
+   extended to the new surface).
+3. **submission-boundary validation** — mixed-kind batches: control kinds
+   are rejected at submit on data-only backends with the queued data
+   requests unharmed, and ride in-band on the ring.
+4. **unaligned byte I/O property test** (hypothesis, importorskip-gated) —
+   random byte spans (page-edge, sub-block, cross-extent) against a
+   host-side bytearray reference on ``backend="ring"`` and ``"fused"``.
+5. registry extensibility; serving's control-plane embedding.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineConfig, Request
+from repro.core.backends import (available_backends, make_backend,
+                                 register_backend)
+from repro.core.blockdev import IOFuture, Volume, VolumeManager
+from repro.core.engine import ChainedStore
+
+# the six engine backends of the acceptance matrix + the host oracle
+BACKENDS = [("upstream", 1), ("loop", 1), ("slots", 1), ("fused", 1),
+            ("sharded", 2), ("ring", 2), ("host", 1)]
+
+BB = 8          # block_bytes (payload_elems)
+PB = 4          # page_blocks -> page_bytes = 32
+PAGES = 8       # capacity = 256 bytes
+
+
+def _mgr(backend: str, n_shards: int = 1, **kw) -> VolumeManager:
+    base = dict(backend=backend, n_shards=n_shards, payload_elems=BB,
+                page_blocks=PB, max_pages=PAGES, n_extents=256,
+                max_volumes=16, batch=16, n_replicas=2)
+    base.update(kw)
+    return VolumeManager(**base)
+
+
+def _pat(seed: int, n: int) -> bytes:
+    return bytes((seed * 37 + i) % 251 for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# 1. byte equivalence on every registered backend
+# ---------------------------------------------------------------------------
+class _Refs:
+    """Host bytearray + ChainedStore double-reference for one manager."""
+
+    def __init__(self, mgr: VolumeManager):
+        self.mgr = mgr
+        self.chained = ChainedStore((BB,))
+        self.bufs = {}          # vid -> bytearray
+        self.cmap = {}          # vid -> chained volume id
+
+    def new_vol(self) -> Volume:
+        v = self.mgr.create()
+        self.bufs[v.vid] = bytearray(self.mgr.capacity)
+        self.cmap[v.vid] = self.chained.create_volume()
+        return v
+
+    def _mirror_blocks(self, vid: int, off: int, n: int) -> None:
+        """Write the ref buffer's current block contents covering
+        [off, off+n) into the chained mirror."""
+        buf = self.bufs[vid]
+        first, last = off // BB, (off + n - 1) // BB
+        for ab in range(first, last + 1):
+            blk = bytes(buf[ab * BB:(ab + 1) * BB])
+            self.chained.write(self.cmap[vid], ab // PB, ab % PB,
+                               np.frombuffer(blk, np.uint8)
+                               .astype(np.float32))
+
+    def write(self, v: Volume, off: int, data: bytes) -> IOFuture:
+        fut = v.pwrite(off, data)
+        self.bufs[v.vid][off:off + len(data)] = data
+        self._mirror_blocks(v.vid, off, len(data))
+        return fut
+
+    def discard(self, v: Volume, off: int, n: int) -> IOFuture:
+        fut = v.discard(off, n)
+        self.bufs[v.vid][off:off + n] = bytes(n)
+        pby = self.mgr.page_bytes
+        ff, lf = -(-off // pby), (off + n) // pby
+        edges = ([(off, ff * pby), (lf * pby, off + n)] if ff < lf
+                 else [(off, off + n)])
+        if ff < lf:
+            for p in range(ff, lf):
+                self.chained.unmap(self.cmap[v.vid], p)
+        for a, b in edges:
+            if b > a:
+                self._mirror_blocks(v.vid, a, b - a)
+        return fut
+
+    def read_expect(self, v: Volume, off: int, n: int):
+        """Submit an async read; expected value is the reference content at
+        SUBMISSION time (sequential per-volume semantics)."""
+        return v.pread(off, n), bytes(self.bufs[v.vid][off:off + n])
+
+    def snapshot(self, v: Volume):
+        out = v.snapshot()
+        self.chained.snapshot(self.cmap[v.vid])
+        return out
+
+    def clone(self, v: Volume) -> Volume:
+        child = v.clone()
+        assert child is not None
+        self.bufs[child.vid] = bytearray(self.bufs[v.vid])
+        self.cmap[child.vid] = self.chained.clone(self.cmap[v.vid])
+        return child
+
+    def delete(self, v: Volume) -> None:
+        self.chained.delete_volume(self.cmap.pop(v.vid))
+        del self.bufs[v.vid]
+        self.mgr.delete(v)
+
+    def check_all(self) -> None:
+        """Every live volume: full-device byte read == bytearray ref, and
+        the ChainedStore walk agrees block by block (holes read zeros)."""
+        self.mgr.flush()
+        for vid, buf in self.bufs.items():
+            got = self.mgr.open(vid).read(0, self.mgr.capacity)
+            assert got == bytes(buf), f"vid {vid} device/bytearray mismatch"
+            for ab in range(len(buf) // BB):
+                want = bytes(buf[ab * BB:(ab + 1) * BB])
+                w = self.chained.read(self.cmap[vid], ab // PB, ab % PB)
+                w = (bytes(BB) if w is None
+                     else np.asarray(w).astype(np.uint8).tobytes())
+                assert w == want, f"vid {vid} block {ab} chained mismatch"
+
+
+@pytest.mark.parametrize("backend,shards", BACKENDS)
+def test_byte_equivalence_interleaved(backend, shards):
+    mgr = _mgr(backend, shards)
+    refs = _Refs(mgr)
+    v1, v2 = refs.new_vol(), refs.new_vol()
+
+    pending = []
+    # aligned + unaligned writes, async, interleaved across volumes
+    pending.append(refs.write(v1, 0, _pat(1, 17)))       # unaligned tail
+    pending.append(refs.write(v2, 5, _pat(2, 11)))       # unaligned head+tail
+    pending.append(refs.write(v1, 13, _pat(3, 9)))       # overlaps in flight
+    r1, e1 = refs.read_expect(v1, 3, 20)                 # async read
+    pending.append(refs.write(v1, 24, _pat(4, 48)))      # page-crossing span
+    r2, e2 = refs.read_expect(v2, 0, 32)
+    assert all(f.result() is not None for f in pending)
+    assert r1.result() == e1 and r2.result() == e2
+    refs.check_all()
+
+    # snapshot -> CoW overwrite -> clone divergence
+    refs.snapshot(v1)
+    refs.write(v1, 2, _pat(5, 40))                       # CoW vs snapshot
+    c1 = refs.clone(v1)
+    refs.write(c1, 0, _pat(6, 23))                       # child diverges
+    refs.write(v1, 64, _pat(7, 16))                      # parent diverges
+    refs.check_all()
+
+    # discard: sub-block, partial-page, and full-page (TRIM) spans
+    refs.write(v2, 32, _pat(8, 96))
+    refs.discard(v2, 34, 3)                              # sub-block
+    refs.discard(v2, 40, 20)                             # partial page
+    refs.discard(v1, 30, 70)                             # edges + full pages
+    refs.check_all()
+
+    # delete a volume, create a fresh one, keep going
+    refs.delete(v2)
+    v3 = refs.new_vol()
+    refs.write(v3, 7, _pat(9, 33))
+    refs.check_all()
+
+
+@pytest.mark.parametrize("backend,shards", [("ring", 2), ("fused", 1)])
+def test_large_span_fans_out_and_completes_on_flush(backend, shards):
+    """One user call -> many SQEs, completed by ONE flush (no per-block
+    host round trips); bytes round-trip exactly."""
+    mgr = _mgr(backend, shards)
+    v = mgr.create()
+    data = _pat(11, 5 * mgr.page_bytes + 13)             # cross-extent span
+    fut = v.pwrite(3, data)
+    rfut = v.pread(3, len(data))
+    assert not fut.done() or backend == "host"
+    mgr.flush()
+    assert fut.done() and rfut.done()
+    assert fut.result() == len(data)
+    assert rfut.result() == data
+
+
+# ---------------------------------------------------------------------------
+# 2. dispatch accounting through the public API (test_ring extended)
+# ---------------------------------------------------------------------------
+def test_api_one_program_per_class_signature(monkeypatch):
+    mgr = _mgr("ring", 2, n_queues=1)
+    pool = mgr.engine.pool
+    vols = [mgr.create() for _ in range(4)]
+
+    def traffic():
+        futs = []
+        for i, v in enumerate(vols):
+            futs.append(v.pwrite(0, _pat(i, mgr.page_bytes)))    # page span
+            futs.append(v.pread(i * BB, 3 * BB))
+        vols[0].snapshot()                                       # in-band vol
+        mgr.discard(vols[1], 0, mgr.page_bytes)                  # in-band unmap
+        mgr.flush()
+        for f in futs:
+            f.result()
+    traffic()
+    assert all(v == 1 for v in pool.trace_counts.values()), pool.trace_counts
+    before = dict(pool.trace_counts)
+    d0 = pool.dispatches
+    traffic()                       # more byte traffic: ZERO new programs
+    assert pool.trace_counts == before
+    assert pool.dispatches > d0
+
+    # one device fetch per pump, even with a span fan-out + control aboard
+    v = vols[2]
+    fut = v.pwrite(0, _pat(3, mgr.page_bytes))
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: (calls.append(1), real(x))[1])
+    done = pool.pump()
+    assert done == PB               # the whole page span in one pump
+    assert len(calls) == 1, f"expected 1 completion fetch, saw {len(calls)}"
+    monkeypatch.undo()
+    assert fut.result() == mgr.page_bytes
+
+
+# ---------------------------------------------------------------------------
+# 3. submission-boundary validation (mixed-kind batches)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,shards", [("upstream", 1), ("loop", 1),
+                                            ("slots", 1), ("fused", 1),
+                                            ("sharded", 2), ("host", 1)])
+def test_control_rejected_at_submit_data_survives(backend, shards):
+    """On data-only backends a control kind is rejected AT THE SUBMISSION
+    BOUNDARY — before enqueue — so data requests already queued alongside
+    it are not lost, and the engine's control() surface still works."""
+    mgr = _mgr(backend, shards)
+    v = mgr.create()
+    eng = mgr.engine
+    w = Request(req_id=0, kind="write", volume=v.vid, page=0, block=0,
+                payload=np.full((BB,), 7.0, np.float32))
+    eng.submit(w)
+    for kind in ("snapshot", "clone", "unmap", "noop"):
+        with pytest.raises(ValueError):
+            eng.submit(Request(req_id=1, kind=kind, volume=v.vid))
+    assert eng.depth() == 1         # the data request is intact
+    assert eng.drain() == 1 and w.status == 0
+    # the same op goes through the control plane instead
+    mgr.snapshot(v)
+    assert v.read(0, BB) == bytes(bytearray([7] * BB))
+
+
+def test_mixed_kind_batch_inband_on_ring():
+    """The ring accepts the same mixed batch in ONE submission stream."""
+    mgr = _mgr("ring", 2, n_queues=1)
+    v = mgr.create()
+    fut = v.pwrite(0, _pat(1, 2 * BB))
+    snap = Request(req_id=mgr._rid(v.vid), kind="snapshot", volume=v.vid)
+    mgr.engine.submit(snap)
+    fut2 = v.pwrite(0, _pat(2, BB))          # CoW against the in-band snap
+    mgr.flush()
+    assert fut.result() == 2 * BB and fut2.result() == BB
+    assert snap.status == 0 and snap.result >= 0
+    assert v.read(0, 2 * BB) == _pat(2, BB) + _pat(1, 2 * BB)[BB:]
+
+
+# ---------------------------------------------------------------------------
+# 5. registry + embedding surfaces
+# ---------------------------------------------------------------------------
+def test_registry_lists_and_rejects():
+    names = available_backends()
+    for name in ("loop", "slots", "fused", "sharded", "ring", "upstream",
+                 "host"):
+        assert name in names
+    with pytest.raises(ValueError, match="registered"):
+        make_backend("nope", EngineConfig())
+    with pytest.raises(ValueError, match="registered"):
+        Engine(EngineConfig(comm="nope"))
+
+
+def test_register_custom_backend_roundtrip():
+    """register_backend() is the extension point: a custom backend drives
+    the full byte API without touching engine.py."""
+    from repro.core.backends import HostStateBackend
+
+    @register_backend("test-custom")
+    class Custom(HostStateBackend):
+        pass
+
+    try:
+        mgr = _mgr("test-custom")
+        v = mgr.create()
+        v.write(3, b"custom backend")
+        assert v.read(3, 14) == b"custom backend"
+        assert isinstance(mgr.engine.impl, Custom)
+    finally:
+        from repro.core import backends as B
+        B._REGISTRY.pop("test-custom", None)
+
+
+def test_engine_facade_legacy_surface():
+    """The façade keeps the legacy attribute surface (shim acceptance)."""
+    eng = Engine(EngineConfig(comm="ring", n_shards=2, payload_shape=(BB,),
+                              n_extents=128, max_pages=16))
+    assert eng.pool is not None and eng.pool is eng.impl
+    assert eng.backend is eng.pool.backend
+    assert eng.frontend is eng.pool.frontend
+    unfused = Engine(EngineConfig(comm="slots", payload_shape=(BB,)))
+    assert unfused.pool is None
+    assert unfused.backend is not None          # the ReplicaGroup
+    up = Engine(EngineConfig(comm="upstream", payload_shape=(BB,)))
+    assert up.pool is None and up.backend is None
+    vol = up.create_volume()
+    r = Request(req_id=0, kind="write", volume=vol, page=0, block=0,
+                payload=np.ones((BB,), np.float32))
+    up.submit(r)
+    assert up.drain() == 1 and r.status == 0
+
+
+def test_volumemanager_stats_and_bounds():
+    mgr = _mgr("ring", 2)
+    v = mgr.create()
+    with pytest.raises(ValueError):
+        v.pread(mgr.capacity - 2, 4)            # out of bounds
+    with pytest.raises(ValueError):
+        v.pwrite(-1, b"x")
+    assert v.pwrite(0, b"").result() == 0       # zero-length ops complete
+    assert v.pread(5, 0).result() == b""
+    st_ = mgr.stats()
+    assert st_["backend"] == "ring" and st_["queued"] == 0
+
+
+def test_serving_allocates_pages_through_volumemanager():
+    """The serving engine's control plane is a VolumeManager over the host
+    backend: alloc_pages returns WriteOps for the external KV data plane."""
+    import jax.numpy as jnp
+    mgr = VolumeManager(backend="host", null_storage=True, n_extents=64,
+                        max_volumes=8, max_pages=4, page_blocks=4,
+                        payload_elems=1)
+    v = mgr.create()
+    ops = mgr.alloc_pages(jnp.asarray([v.vid], jnp.int32),
+                          jnp.asarray([0], jnp.int32),
+                          mask=jnp.asarray([True]))
+    assert bool(ops.ok[0]) and int(ops.dst[0]) >= 0
+    assert int(mgr.state.table[v.vid, 0]) == int(ops.dst[0])
+    child = mgr.clone(v)
+    assert child is not None and child.vid != v.vid
+    mgr.delete(child)
+    mgr.delete(v)

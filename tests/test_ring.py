@@ -540,6 +540,42 @@ def test_result_status_unified_across_comms(comm, storage, shards):
     np.testing.assert_allclose(np.asarray(r.result), np.full(PAY, 7.0))
 
 
+@pytest.mark.parametrize("comm,storage,shards", [
+    ("loop", "chained", 1), ("loop", "dbs", 1),
+    ("slots", "chained", 1), ("slots", "dbs", 1),
+    ("fused", "dbs", 1), ("sharded", "dbs", 2), ("ring", "dbs", 2),
+    ("upstream", "dbs", 1), ("host", "dbs", 1),
+])
+def test_latency_unified_across_comms(comm, storage, shards):
+    """Satellite (ISSUE 4): ``Request.latency`` is populated — in pump
+    ticks — on EVERY comm mode, not just the ring's CQE path. A lone
+    request completes at latency 1; under slot pressure (or the upstream/
+    host one-op-per-tick loop) later requests ride later ticks."""
+    eng = Engine(EngineConfig(comm=comm, storage=storage, payload_shape=PAY,
+                              n_extents=256, max_pages=64, batch=8,
+                              n_slots=4, n_replicas=2, n_shards=shards,
+                              max_volumes=16))
+    vol = eng.create_volume()
+    w = Request(req_id=0, kind="write", volume=vol, page=1, block=2,
+                payload=np.full(PAY, 7.0, np.float32))
+    eng.submit(w)
+    assert eng.drain() == 1
+    assert w.latency == 1, (comm, w.latency)
+    reqs = [Request(req_id=i, kind="write", volume=vol, page=2 + i, block=0,
+                    payload=np.full(PAY, float(i), np.float32))
+            for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    assert eng.drain() == 8
+    lats = sorted(r.latency for r in reqs)
+    assert all(l is not None and l >= 1 for l in lats), (comm, lats)
+    assert lats[-1] > lats[0], (comm, lats)   # 4 slots / 1-op ticks: queueing
+    rd = Request(req_id=100, kind="read", volume=vol, page=1, block=2)
+    eng.submit(rd)
+    assert eng.drain() == 1
+    assert rd.latency is not None and rd.latency >= 1
+
+
 def test_result_status_upstream_engine():
     eng = UpstreamEngine(EngineConfig(payload_shape=PAY))
     vol = eng.create_volume()
