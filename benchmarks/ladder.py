@@ -29,6 +29,13 @@ must drain the pipeline and dispatch each control op host-side.
 workload with ~10% unaligned writes (in-API read-modify-write) — and pins
 aligned-span throughput to >= 0.9x the raw request-level ``+ring`` stream.
 
+``run_replication`` is the replica-transport/policy matrix (ISSUE 5): the
+slots engine over LocalTransport (gated >= 0.9x the identical ``+dbs``
+column — the transport boundary must be free) and over a simulated network
+with a straggler link, comparing write policies all/quorum/async and the
+latency-weighted read policy — the quorum-vs-all tradeoff the paper
+measures over a real network.
+
 Also a CLI (the CI bench-smoke job, installed as ``repro-bench``):
 ``repro-bench --smoke --out BENCH.json --check`` runs a tiny-geometry
 ladder + the mixed data+control workload + the VolumeManager blockdev
@@ -372,6 +379,92 @@ def run_blockdev(*, n_requests: int = 512, payload_elems: int = 64,
             "mixed": max(measure_mixed() for _ in range(repeats))}
 
 
+def run_replication(*, n_requests: int = 512, payload_elems: int = 64,
+                    pages: int = 256, n_volumes: int = 4, repeats: int = 1,
+                    straggler: int = 6, kind: str = "mixed", **_ignored
+                    ) -> Dict[str, Dict[str, float]]:
+    """The replica-transport/policy matrix (ISSUE 5): the host-dispatch
+    (+dbs, ``comm="slots"``) engine over each controller<->replica
+    transport and write/read policy (core/transport.py,
+    core/replication.py). Best-of-``repeats`` ops/s per cell.
+
+    - ``local/all`` — the redesigned default: LocalTransport,
+      write-to-all. Measured on BOTH pure-data rows with the ladder's
+      default 2 replicas so it is the exact configuration of the ``+dbs``
+      column — the CI gate pins it to >= 0.9x that column
+      (``check_replication_gate``): the transport boundary is allowed a
+      message object, not a slow path.
+    - ``simnet/*`` — the policy matrix the paper measures over a real
+      network, on a simulated one: 3 replicas, one ``straggler``x-slower
+      link (``latency=[1, 1, straggler]``). ``all`` waits for the
+      straggler every batch; ``quorum`` acks on the two fast links (the
+      straggler catches up via per-link FIFO, bounded by the in-flight
+      window); ``async`` is write-behind; ``quorum+latreads`` adds the
+      latency-weighted read policy so reads also avoid the slow link —
+      the quorum-vs-all tradeoff, benchmarkable.
+    """
+    payload = jnp.ones((payload_elems,), jnp.float32)
+    simnet = dict(transport="simnet",
+                  transport_opts=dict(latency=[1, 1, straggler], window=8))
+    scenarios = {
+        "local/all": dict(n_replicas=2),
+        "simnet/all": dict(n_replicas=3, write_policy="all", **simnet),
+        "simnet/quorum": dict(n_replicas=3, write_policy="quorum", **simnet),
+        "simnet/async": dict(n_replicas=3, write_policy="async", **simnet),
+        "simnet/quorum+latreads": dict(n_replicas=3, write_policy="quorum",
+                                       read_policy="latency", **simnet),
+    }
+    out: Dict[str, Dict[str, float]] = {}
+    for name, kw in scenarios.items():
+        rows = (("full_engine", "without_storage") if name == "local/all"
+                else ("full_engine",))
+        out[name] = {}
+
+        def make(row: str):
+            # geometry mirrors make_engine's, so the local/all cells are
+            # the exact configuration of the +dbs column the gate compares
+            # against (and the same --kind workload drives both)
+            return Engine(EngineConfig(
+                storage="dbs", comm="slots", n_extents=4096,
+                payload_shape=(payload_elems,), max_pages=pages,
+                null_storage=row == "without_storage", **kw))
+
+        for row in rows:
+            out[name][row] = max(
+                measure_engine(make(row), n_requests=n_requests, kind=kind,
+                               pages=pages, n_volumes=n_volumes,
+                               payload=payload)
+                for _ in range(repeats))
+        # the metric the policies actually trade: controller-observed wait
+        # time in SIMULATED ticks per op (deterministic — no repeats).
+        # Wall ops/s barely separates the policies because ticking a
+        # simulated link costs the host ~nothing; a real network charges
+        # the latency the tick count stands in for.
+        eng = make("full_engine")
+        measure_engine(eng, n_requests=n_requests, kind=kind, pages=pages,
+                       n_volumes=n_volumes, payload=payload, warmup=False)
+        out[name]["wait_ticks_per_op"] = (eng.backend.wait_ticks
+                                          / n_requests)
+    return out
+
+
+def check_replication_gate(repl: Dict[str, Dict[str, float]],
+                           ladder: Dict[str, Dict[str, float]],
+                           floor: float = 0.9) -> List[str]:
+    """The transport-redesign gate (ISSUE 5 acceptance): ``local/all`` —
+    the redesigned replica path — must hold >= ``floor``x the ``+dbs``
+    column (the identical engine configuration) on the pure-data rows. The
+    boundary buys pluggability, not overhead."""
+    problems = []
+    for row in ("full_engine", "without_storage"):
+        ops, base = repl["local/all"][row], ladder["+dbs"][row]
+        if ops < base * floor:
+            problems.append(
+                f"replication local/all/{row}: {ops:.0f} ops/s < {floor:g}x "
+                f"+dbs ({base:.0f} ops/s)")
+    return problems
+
+
 def check_blockdev_gate(blockdev: Dict[str, float],
                         floor: float = 0.9) -> List[str]:
     """The public-API gate (ISSUE 4 acceptance): byte-addressed aligned
@@ -509,6 +602,7 @@ def main(argv=None) -> int:
     ladder = run_ladder(kind=args.kind, **kw)
     mixed = run_mixed_control(**kw)
     blockdev = run_blockdev(**kw)
+    replication = run_replication(kind=args.kind, **kw)
 
     width = max(len(c) for c in COLUMNS) + 2
     print("row".ljust(18) + "".join(c.rjust(width) for c in COLUMNS))
@@ -522,13 +616,20 @@ def main(argv=None) -> int:
           f"aligned {blockdev['aligned']:.0f} ops/s vs raw +ring "
           f"{blockdev['raw_ring']:.0f} ops/s; mixed-size ~10% unaligned "
           f"{blockdev['mixed']:.0f} ops/s")
+    repl_cells = "  ".join(
+        f"{name} {rows['full_engine']:.0f}ops/s"
+        f"/{rows['wait_ticks_per_op']:.2f}tk"
+        for name, rows in replication.items())
+    print("replication transports/policies (slots engine, full_engine, "
+          "simnet straggler link; ops/s wall + controller wait "
+          f"ticks/op): {repl_cells}")
 
     if args.out:
         doc = {"bench": "ladder", "kind": args.kind,
                "smoke": bool(args.smoke), "params": kw,
                "columns": list(COLUMNS), "rows": list(ROWS),
                "ops_per_s": ladder, "mixed_control": mixed,
-               "blockdev": blockdev}
+               "blockdev": blockdev, "replication": replication}
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.out}")
@@ -536,14 +637,16 @@ def main(argv=None) -> int:
     if args.check:
         problems = (check_no_regression(ladder)
                     + check_ring_gates(ladder, mixed)
-                    + check_blockdev_gate(blockdev))
+                    + check_blockdev_gate(blockdev)
+                    + check_replication_gate(replication, ladder))
         if problems:
             print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
             return 1
         print("check OK: +fused/+sharded/+ring hold the +dbs floor on every "
               "row, +ring holds +fused on pure data and beats the fence on "
-              "mixed data+control, and the VolumeManager byte API holds "
-              "0.9x raw +ring on aligned spans")
+              "mixed data+control, the VolumeManager byte API holds "
+              "0.9x raw +ring on aligned spans, and the replica-transport "
+              "local/all path holds 0.9x the +dbs column on pure data")
     return 0
 
 

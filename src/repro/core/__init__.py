@@ -7,10 +7,12 @@
 #   fused.py        single-program fused engine step (admit->CoW->complete)
 #   sharded.py      EnginePool: S shards, one vmapped step, pipelined pump
 #   ring.py         SQ/CQ ring protocol: opcode-tagged data+control ops
+#   transport.py    controller<->replica wire: opcode-tagged messages over
+#                   pluggable transports (local/device/simnet) + registry
 #   backends.py     the backend registry (loop/slots/fused/sharded/ring/...)
 #   engine.py       the Engine façade + upstream baseline + null layers
 #   blockdev.py     ublk-style public API: VolumeManager/Volume, byte I/O
-from repro.core import dbs, ring, slots  # noqa: F401
+from repro.core import dbs, ring, slots, transport  # noqa: F401
 from repro.core.backends import (Backend, available_backends,  # noqa: F401
                                  make_backend, register_backend)
 from repro.core.blockdev import IOFuture, Volume, VolumeManager  # noqa: F401
@@ -24,3 +26,7 @@ from repro.core.replication import (ReplicaGroup,  # noqa: F401
 from repro.core.ring import (CQ, SQE, RingEngine,  # noqa: F401
                              RingFrontend)
 from repro.core.sharded import EnginePool  # noqa: F401
+from repro.core.transport import (LocalTransport,  # noqa: F401
+                                  ReplicaTransport, SimNetTransport,
+                                  WireMsg, available_transports,
+                                  make_transport, register_transport)

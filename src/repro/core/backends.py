@@ -143,7 +143,9 @@ class _FrontendBackendBase(ControlDispatch):
             self.storage = ReplicaGroup(
                 cfg.n_replicas, cfg.n_extents, cfg.max_volumes, cfg.max_pages,
                 cfg.page_blocks, cfg.payload_shape,
-                null_storage=cfg.null_storage)
+                null_storage=cfg.null_storage, transport=cfg.transport,
+                write_policy=cfg.write_policy, read_policy=cfg.read_policy,
+                transport_opts=cfg.transport_opts)
         self._cow = (cfg.cow if cfg.cow != "auto" else
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
         self.completed = 0
@@ -305,6 +307,12 @@ class FusedBackend(_FrontendBackendBase):
     def __init__(self, cfg):
         if cfg.storage != "dbs":
             raise ValueError("backend='fused' requires storage='dbs'")
+        if cfg.write_policy != "all" or cfg.read_policy != "rr":
+            raise ValueError(
+                "backend='fused' serves the data plane IN-PROGRAM "
+                "(mirror-to-all writes, in-program rr reads); write_policy="
+                f"{cfg.write_policy!r}/read_policy={cfg.read_policy!r} "
+                "need a host-dispatch backend (loop | slots)")
         super().__init__(cfg)
 
     def pump(self) -> int:
@@ -320,18 +328,20 @@ class FusedBackend(_FrontendBackendBase):
         if not reqs:
             return 0
         if self.storage is None:
-            states, pools = (), ()
+            states, pools, page_revs = (), (), ()
             rr = 0
         else:
             states, pools = self.storage.device_state()
+            page_revs = self.storage.device_page_revs()
             rr = self.storage.bump_rr()
         if any(r.kind == "write" for r in reqs):
-            table, states, pools, ok, reads = fused_step(
-                self.frontend.table, states, pools, batch, rr,
+            table, states, pools, page_revs, ok, reads = fused_step(
+                self.frontend.table, states, pools, page_revs, batch, rr,
                 null_backend=self.cfg.null_backend,
                 null_storage=self.cfg.null_storage, cow=self._cow)
             if self.storage is not None:
                 self.storage.set_device_state(states, pools)
+                self.storage.set_device_page_revs(page_revs)
         else:
             # read-only batch: replica state is untouched, so dispatch the
             # input-only variant (no pool pass-through copies)

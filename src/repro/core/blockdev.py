@@ -52,7 +52,14 @@ Snapshot/clone are volume-granular: ``vol.snapshot()`` freezes the head,
 
 The manager's geometry parameters mirror ``EngineConfig``; ``backend=``
 names any registered backend ("loop" | "slots" | "fused" | "sharded" |
-"ring" | "upstream" | "host"). See docs/ARCHITECTURE.md ("Public API").
+"ring" | "upstream" | "host"), and ``transport=`` / ``write_policy=`` /
+``read_policy=`` name the controller<->replica wire and its mirroring
+policies (core/transport.py — host-dispatch backends take the full policy
+matrix; the in-program engines mirror-to-all inside the step). The manager
+is a context manager: ``with VolumeManager(...) as mgr:`` drains all
+in-flight I/O (including write-behind replica traffic) on exit, and
+``close()`` makes further submissions raise. See docs/ARCHITECTURE.md
+("Public API").
 """
 from __future__ import annotations
 
@@ -81,10 +88,14 @@ class IOFuture:
     ``discard``: ``done()`` polls the requests' completion statuses,
     ``result()`` drives the manager's pump loop until complete and returns
     the call's value (``bytes`` for reads, the byte count for writes and
-    discards). Raises ``OSError`` if any constituent op completed with a
-    non-OK status."""
+    discards). The value is assembled ONCE and cached: repeated ``result()``
+    calls are idempotent — no re-assembly and no redundant flush after the
+    first success. Raises ``OSError`` if any constituent op completed with
+    a non-OK status."""
 
-    __slots__ = ("_mgr", "_reqs", "_assemble", "_value")
+    _UNSET = object()
+
+    __slots__ = ("_mgr", "_reqs", "_assemble", "_value", "_cached")
 
     def __init__(self, mgr: "VolumeManager", reqs: List[Request],
                  assemble: Optional[Callable[[], Any]] = None,
@@ -93,15 +104,19 @@ class IOFuture:
         self._reqs = reqs
         self._assemble = assemble
         self._value = value
+        self._cached = IOFuture._UNSET
 
     def done(self) -> bool:
-        return all(r.status is not None for r in self._reqs)
+        return (self._cached is not IOFuture._UNSET
+                or all(r.status is not None for r in self._reqs))
 
     def latency(self) -> int:
         """Max completion latency (pump ticks) across the fan-out."""
         return max((r.latency or 0 for r in self._reqs), default=0)
 
     def result(self) -> Any:
+        if self._cached is not IOFuture._UNSET:
+            return self._cached
         if not self.done():
             self._mgr.flush()
         if not self.done():
@@ -110,7 +125,9 @@ class IOFuture:
         if bad:
             raise OSError(f"{bad[0].kind} failed with status {bad[0].status} "
                           f"(volume {bad[0].volume}, page {bad[0].page})")
-        return self._assemble() if self._assemble is not None else self._value
+        self._cached = (self._assemble() if self._assemble is not None
+                        else self._value)
+        return self._cached
 
 
 class Volume:
@@ -192,14 +209,20 @@ class VolumeManager:
                  max_volumes: int = 16, max_pages: int = 256,
                  n_queues: int = 4, n_slots: int = 256, batch: int = 64,
                  storage: str = "dbs", null_backend: bool = False,
-                 null_storage: bool = False, cow: str = "auto"):
+                 null_storage: bool = False, cow: str = "auto",
+                 transport: str = "local", write_policy: str = "all",
+                 read_policy: str = "rr",
+                 transport_opts: Optional[Dict[str, Any]] = None):
         self.engine = Engine(EngineConfig(
             comm=backend, n_shards=n_shards, n_replicas=n_replicas,
             payload_shape=(payload_elems,), page_blocks=page_blocks,
             n_extents=n_extents, max_volumes=max_volumes,
             max_pages=max_pages, n_queues=n_queues, n_slots=n_slots,
             batch=batch, storage=storage, null_backend=null_backend,
-            null_storage=null_storage, cow=cow))
+            null_storage=null_storage, cow=cow, transport=transport,
+            write_policy=write_policy, read_policy=read_policy,
+            transport_opts=transport_opts))
+        self._closed = False
         self.backend_name = backend
         self.block_bytes = payload_elems
         self.page_blocks = page_blocks
@@ -265,6 +288,7 @@ class VolumeManager:
     def submit(self, req: Request) -> None:
         """Raw request-level escape hatch (validated at the backend's
         submission boundary)."""
+        self._check_open()
         self.engine.submit(req)
 
     def pump(self) -> int:
@@ -291,6 +315,36 @@ class VolumeManager:
             self._n_pending = 0
         return done
 
+    def close(self) -> int:
+        """Drain every in-flight I/O (including write-behind replica
+        transport traffic) and close the manager: further submissions
+        raise, ``flush``/``pump`` stay callable no-ops, handed-out
+        ``IOFuture``s resolve (their requests completed in the drain).
+        Idempotent. Returns the number of completions the final drain
+        delivered."""
+        if self._closed:
+            return 0
+        done = self.flush()
+        storage = self.engine.backend
+        if storage is not None and hasattr(storage, "drain_transports"):
+            storage.drain_transports()    # quorum/async stragglers land
+        self._closed = True
+        return done
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __enter__(self) -> "VolumeManager":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ValueError("I/O on a closed VolumeManager")
+
     def stats(self) -> Dict[str, Any]:
         out = {"completed": self.engine.completed,
                "queued": self.engine.depth(),
@@ -303,6 +357,7 @@ class VolumeManager:
 
     # ------------------------------------------------------------ lifecycle
     def create(self) -> Volume:
+        self._check_open()
         vid = self.engine.create_volume()
         if vid is None or vid < 0:
             raise RuntimeError("volume table full")
@@ -318,6 +373,7 @@ class VolumeManager:
         """One control op, ordered behind the volume's in-flight stream:
         in-band SQE through the volume's own queue on the ring, host-side
         dispatch behind a flush elsewhere. Drains to completion either way."""
+        self._check_open()
         if self._inband and kind in ("snapshot", "clone", "delete"):
             r = Request(req_id=self._rid(vid), kind=kind, volume=vid)
             self.engine.submit(r)
@@ -345,6 +401,7 @@ class VolumeManager:
 
     # ------------------------------------------------------------ byte I/O
     def pread(self, vol, off: int, nbytes: int) -> IOFuture:
+        self._check_open()
         vid = self._vid(vol)
         self._check_span(off, nbytes)
         if nbytes == 0:
@@ -377,6 +434,7 @@ class VolumeManager:
         return fut.result()          # drains: ordered behind all in-flight
 
     def pwrite(self, vol, off: int, data) -> IOFuture:
+        self._check_open()
         vid = self._vid(vol)
         data = bytes(data)
         n = len(data)
@@ -430,6 +488,7 @@ class VolumeManager:
         (extents freed — in-band UNMAP SQEs on the ring), partial edges are
         zero-filled through the write path. Reads of the span return zeros
         afterwards."""
+        self._check_open()
         vid = self._vid(vol)
         self._check_span(off, nbytes)
         if nbytes == 0:

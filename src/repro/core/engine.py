@@ -56,6 +56,19 @@ class EngineConfig:
                                  # | pallas (force the dbs_copy kernel)
                                  # | ref (apply_write_ops gather/scatter)
     n_shards: int = 1            # engine shards for comm="sharded"/"ring"
+    transport: str = "local"     # controller<->replica wire (a REGISTERED
+                                 # TRANSPORT, core/transport.py): local
+                                 # (in-process) | device (stacked device
+                                 # endpoints) | simnet (simulated network).
+                                 # On in-program backends (fused/sharded/
+                                 # ring) it carries control+rebuild traffic
+    write_policy: str = "all"    # mirrored-write completion: all | quorum
+                                 # | async (host-dispatch backends only)
+    read_policy: str = "rr"      # serving-replica pick: rr | latency
+    transport_opts: Optional[Dict[str, Any]] = None
+                                 # per-transport knobs (simnet: latency /
+                                 # window / drop / reorder / seed; list
+                                 # values are per-replica)
 
 
 class Engine:

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dbs, slots
+from repro.core.transport import stamp_page_rev
 from repro.kernels.dbs_copy.ops import dbs_copy_pool
 
 
@@ -86,7 +87,8 @@ def _cow_apply(pool, ops: dbs.WriteOps, payload, block_offsets, cow: str):
 
 
 def step_core(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
-              pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+              pools: Tuple[jnp.ndarray, ...],
+              page_revs: Tuple[jnp.ndarray, ...], batch: FusedBatch,
               rr: jnp.ndarray, healthy=None, *, null_backend: bool = False,
               null_storage: bool = False, cow: str = "pallas"):
     """The fused controller iteration, un-jitted (vmap-safe over shards).
@@ -97,52 +99,63 @@ def step_core(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
     healthy replicas and reads round-robin over the healthy subset — the
     form core/sharded.py vmaps, where health differs per shard and cannot
     change the pytree structure.
+
+    ``page_revs``: one (V, P) last-write watermark array per replica
+    (``transport.stamp_page_rev``), stamped alongside the mirrored writes
+    so the streamed delta rebuild (core/replication.py) works after
+    in-program traffic; () with ``null_storage``.
     """
     table, ids, ok = slots.transact(table, batch.want, batch.volume,
                                     batch.queue, batch.step)
     reads = jnp.zeros_like(batch.payload)
     if null_backend or not states:
-        return table, states, pools, ok, reads
+        return table, states, pools, page_revs, ok, reads
 
     wmask = ok & batch.is_write
     bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
-    out_states, out_pools = [], []
+    out_states, out_pools, out_prs = [], [], []
     for i, st in enumerate(states):            # mirrored write-to-all
         m = wmask if healthy is None else wmask & healthy[i]
         st, wops = dbs.write_pages(st, batch.volume, batch.page, bits, m)
         if not null_storage:
             out_pools.append(_cow_apply(pools[i], wops, batch.payload,
                                         batch.block, cow))
+            out_prs.append(stamp_page_rev(page_revs[i], batch.volume,
+                                          batch.page, wops.ok, st.revision))
         out_states.append(st)
 
     if not null_storage:
         reads = _rr_gather(out_states, out_pools, batch, rr,
                            ok & ~batch.is_write, reads, healthy)
-    return table, tuple(out_states), tuple(out_pools), ok, reads
+    return (table, tuple(out_states), tuple(out_pools), tuple(out_prs), ok,
+            reads)
 
 
 @partial(jax.jit, static_argnames=("null_backend", "null_storage", "cow"),
-         donate_argnums=(0, 1, 2))
+         donate_argnums=(0, 1, 2, 3))
 def fused_step(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
-               pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
+               pools: Tuple[jnp.ndarray, ...],
+               page_revs: Tuple[jnp.ndarray, ...], batch: FusedBatch,
                rr: jnp.ndarray, *, null_backend: bool = False,
                null_storage: bool = False, cow: str = "pallas"):
     """One whole controller iteration as a single compiled program.
 
-    states/pools: one entry per healthy replica (writes are mirrored to all
-    of them; reads gather from replica ``rr % R``). With ``null_storage``
-    the pools are untouched — pass ``pools=()`` so the (large) payload
-    arrays never enter the program at all. Returns
-    ``(table', states', pools', ok (B,) bool, reads (B, *payload))`` —
-    ``ok`` marks lanes that were admitted (and therefore completed), and
-    ``reads`` carries gathered payloads on read lanes, zeros elsewhere.
+    states/pools/page_revs: one entry per healthy replica (writes are
+    mirrored to all of them; reads gather from replica ``rr % R``; the
+    per-page watermarks stamp with the writes). With ``null_storage`` the
+    pools are untouched — pass ``pools=()``/``page_revs=()`` so the (large)
+    payload arrays never enter the program at all. Returns
+    ``(table', states', pools', page_revs', ok (B,) bool,
+    reads (B, *payload))`` — ``ok`` marks lanes that were admitted (and
+    therefore completed), and ``reads`` carries gathered payloads on read
+    lanes, zeros elsewhere.
 
-    The table, replica states and pools are DONATED: the engine replaces
-    its references with the returned pytrees every pump, so XLA updates the
-    (large) pools in place instead of copying them through each step —
-    callers must not touch the passed-in arrays afterwards.
+    The table, replica states, pools and watermarks are DONATED: the engine
+    replaces its references with the returned pytrees every pump, so XLA
+    updates the (large) pools in place instead of copying them through each
+    step — callers must not touch the passed-in arrays afterwards.
     """
-    return step_core(table, states, pools, batch, rr,
+    return step_core(table, states, pools, page_revs, batch, rr,
                      null_backend=null_backend, null_storage=null_storage,
                      cow=cow)
 

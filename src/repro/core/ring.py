@@ -56,6 +56,7 @@ from repro.core import dbs, slots
 from repro.core.control import ControlDispatch
 from repro.core.fused import _cow_apply, _rr_gather
 from repro.core.replication import ShardedReplicaGroup
+from repro.core.transport import clone_page_rev, stamp_page_rev
 
 # ---------------------------------------------------------------------------
 # the opcode table (SQE.op) and completion statuses (CQE.status)
@@ -158,7 +159,7 @@ def make_sharded_cq(n_shards: int, n_slots: int,
 # ---------------------------------------------------------------------------
 # the opcode-dispatched step
 # ---------------------------------------------------------------------------
-def _apply_vol_ops(states, batch: SQE, ok, value, status):
+def _apply_vol_ops(states, page_revs, batch: SQE, ok, value, status):
     """Apply the SNAPSHOT/CLONE/UNMAP/DELETE tail in lane order.
 
     A ``lax.scan`` over a ``CTRL_TAIL``-lane window keeps submission-order
@@ -168,9 +169,12 @@ def _apply_vol_ops(states, batch: SQE, ok, value, status):
     control lane — control lanes are contiguous (drain policy) and capped
     at CTRL_TAIL per batch, so the window covers every one of them without
     scanning the whole batch. Control ops apply to EVERY replica slice,
-    healthy or not — the lock-step convention of
-    ``ShardedReplicaGroup._shard_op``, which lets rebuild copy metadata
-    wholesale instead of replaying control ops."""
+    healthy or not — the lock-step convention of the sharded group's
+    mirrored control path, which lets rebuild copy metadata wholesale
+    instead of replaying control ops. The per-replica watermark arrays ride
+    the scan carry because CLONE must copy the source's row
+    (``transport.clone_page_rev`` — delta rebuild would otherwise miss
+    extents reachable only through the clone's table)."""
     b_n = batch.op.shape[0]
     k = min(CTRL_TAIL, b_n)
     is_vol = ok & (batch.op >= OP_SNAPSHOT) & (batch.op <= OP_DELETE)
@@ -183,27 +187,36 @@ def _apply_vol_ops(states, batch: SQE, ok, value, status):
         op, vol, page, live = xs
         branch = jnp.where(live, op - OP_SNAPSHOT + 1, 0)
 
-        def b_noop(sts):
-            return sts, jnp.int32(-1)
+        def b_noop(c):
+            return c, jnp.int32(-1)
 
         def each(fn):
-            def b(sts):
+            def b(c):
+                sts, prs = c
                 outs = [fn(st) for st in sts]
-                return tuple(st for st, _ in outs), outs[0][1]
+                return (tuple(st for st, _ in outs), prs), outs[0][1]
             return b
 
+        def b_clone(c):
+            sts, prs = c
+            outs = [dbs.clone(st, vol) for st in sts]
+            # each replica clones its OWN state (lock-step ids) and its
+            # watermark row inherits the source's
+            prs = tuple(clone_page_rev(pr, vol, vid)
+                        for pr, (_, vid) in zip(prs, outs))
+            return (tuple(st for st, _ in outs), prs), outs[0][1]
+
         b_snap = each(lambda st: dbs.snapshot(st, vol))
-        b_clone = each(lambda st: dbs.clone(st, vol))
         b_unmap = each(
             lambda st: (dbs.unmap(st, vol, page[None]), jnp.int32(-1)))
         b_delete = each(
             lambda st: (dbs.delete_volume(st, vol), jnp.int32(-1)))
-        sts, val = jax.lax.switch(
+        c, val = jax.lax.switch(
             branch, [b_noop, b_snap, b_clone, b_unmap, b_delete], carry)
-        return sts, val
+        return c, val
 
-    states, vals = jax.lax.scan(
-        lane, states, (op_w, vol_w, page_w, is_vol_w))
+    (states, page_revs), vals = jax.lax.scan(
+        lane, (states, page_revs), (op_w, vol_w, page_w, is_vol_w))
     value = jax.lax.dynamic_update_slice_in_dim(
         value, jnp.where(is_vol_w, vals, sl(value)), start, axis=0)
     # snapshot/clone report failure (table full / dead volume) through a
@@ -212,19 +225,23 @@ def _apply_vol_ops(states, batch: SQE, ok, value, status):
     status = jax.lax.dynamic_update_slice_in_dim(
         status, jnp.where(signals & (vals < 0), ST_ERR, sl(status)),
         start, axis=0)
-    return states, value, status
+    return states, page_revs, value, status
 
 
-def _apply_repl_ops(states, pools, healthy, batch: SQE, ok, status):
+def _apply_repl_ops(states, pools, page_revs, healthy, batch: SQE, ok,
+                    status):
     """Apply the (at most one — the frontend closes the batch on it)
     FAIL/REBUILD lane against the traced health mask.
 
     FAIL flips the mask bit unless the target is the shard's last healthy
     replica (→ ST_LAST, mask untouched: an all-failed shard would silently
     ack writes and fabricate zero reads). REBUILD copies the most-up-to-date
-    healthy replica's state+pool into the target and re-marks it healthy;
-    rebuilding a healthy replica is a protocol error (→ ST_HEALTHY). All of
-    it is traced — in-band failover never leaves the compiled program."""
+    healthy replica's state+pool+watermarks into the target and re-marks it
+    healthy (in-band rebuild is a whole-copy — it happens inside one
+    program; the host-side *streamed delta* rebuild lives in
+    core/replication.py); rebuilding a healthy replica is a protocol error
+    (→ ST_HEALTHY). All of it is traced — in-band failover never leaves the
+    compiled program."""
     n_rep = len(states)
     is_repl = ok & ((batch.op == OP_FAIL) | (batch.op == OP_REBUILD))
     has = jnp.any(is_repl)
@@ -261,6 +278,11 @@ def _apply_repl_ops(states, pools, healthy, batch: SQE, ok, status):
         pools = tuple(
             jnp.where(do_rebuild & (tgt == r), donor_pool, p)
             for r, p in enumerate(pools))
+    if page_revs:
+        donor_pr = pick(page_revs)
+        page_revs = tuple(
+            jnp.where(do_rebuild & (tgt == r), donor_pr, p)
+            for r, p in enumerate(page_revs))
 
     new_tgt = jnp.where(do_fail, False, jnp.where(do_rebuild, True, tgt_h))
     healthy = h.at[tgt].set(jnp.where(has, new_tgt, tgt_h))
@@ -270,12 +292,13 @@ def _apply_repl_ops(states, pools, healthy, batch: SQE, ok, status):
                   jnp.where(do_fail | do_rebuild, ST_OK, ST_ERR)))
     b_n = batch.op.shape[0]
     status = jnp.where((jnp.arange(b_n) == lane) & has, lane_status, status)
-    return states, pools, healthy, status
+    return states, pools, page_revs, healthy, status
 
 
 def ring_step_core(table: slots.SlotTable, cq: CQ,
                    states: Tuple[dbs.DBSState, ...],
-                   pools: Tuple[jnp.ndarray, ...], batch: SQE,
+                   pools: Tuple[jnp.ndarray, ...],
+                   page_revs: Tuple[jnp.ndarray, ...], batch: SQE,
                    rr: jnp.ndarray, healthy: jnp.ndarray, *,
                    classes: Tuple[str, ...], null_backend: bool = False,
                    null_storage: bool = False, cow: str = "pallas"):
@@ -284,8 +307,11 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
     ``classes`` (static) names the opcode classes present in this batch
     ("read" / "write" / "vol" / "repl" / "noop") — the host knows them at
     drain time, so each signature compiles its own program and a pure-data
-    batch pays exactly the fused step's cost plus the CQE scatter. Returns
-    ``(table', cq', states', pools', healthy', CQEView)``.
+    batch pays exactly the fused step's cost plus the CQE scatter.
+    ``page_revs`` are the per-replica last-write watermarks
+    (``transport.stamp_page_rev``), stamped with the write phase and copied
+    whole on in-band REBUILD. Returns
+    ``(table', cq', states', pools', page_revs', healthy', CQEView)``.
     """
     table, ids, ok = slots.transact(table, batch.want, batch.volume,
                                     batch.queue, batch.step,
@@ -299,7 +325,7 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
         if "write" in classes:                   # mirrored CoW data phase
             wmask = ok & (batch.op == OP_WRITE)
             bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
-            out_states, out_pools = [], []
+            out_states, out_pools, out_prs = [], [], []
             for i, st in enumerate(states):
                 st, wops = dbs.write_pages(st, batch.volume, batch.page,
                                            bits, wmask & healthy[i])
@@ -307,19 +333,23 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
                     out_pools.append(_cow_apply(pools[i], wops,
                                                 batch.payload, batch.block,
                                                 cow))
+                    out_prs.append(stamp_page_rev(
+                        page_revs[i], batch.volume, batch.page, wops.ok,
+                        st.revision))
                 out_states.append(st)
             states = tuple(out_states)
             if not null_storage:
                 pools = tuple(out_pools)
+                page_revs = tuple(out_prs)
         if "read" in classes and not null_storage:
             reads = _rr_gather(states, pools, batch, rr,
                                ok & (batch.op == OP_READ), reads, healthy)
         if "vol" in classes:                     # lane-ordered control tail
-            states, value, status = _apply_vol_ops(states, batch, ok,
-                                                   value, status)
+            states, page_revs, value, status = _apply_vol_ops(
+                states, page_revs, batch, ok, value, status)
         if "repl" in classes:                    # in-band fail/rebuild
-            states, pools, healthy, status = _apply_repl_ops(
-                states, pools, healthy, batch, ok, status)
+            states, pools, page_revs, healthy, status = _apply_repl_ops(
+                states, pools, page_revs, healthy, batch, ok, status)
 
     latency = (batch.step - batch.tick + 1).astype(jnp.int32)
     # CQE emission: one record per admitted lane, at its slot id
@@ -333,7 +363,7 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
         table, status=table.status.at[idx].set(status, mode="drop"))
     view = CQEView(ok=ok, status=status, value=value, latency=latency,
                    reads=reads)
-    return table, cq, states, pools, healthy, view
+    return table, cq, states, pools, page_revs, healthy, view
 
 
 def vmap_shards(fn, n_shards: int):
@@ -547,7 +577,9 @@ class RingEngine(ControlDispatch):
             self.backend = ShardedReplicaGroup(
                 s, cfg.n_replicas, cfg.n_extents, cfg.max_volumes,
                 cfg.max_pages, cfg.page_blocks, cfg.payload_shape,
-                null_storage=cfg.null_storage)
+                null_storage=cfg.null_storage, transport=cfg.transport,
+                write_policy=cfg.write_policy, read_policy=cfg.read_policy,
+                transport_opts=cfg.transport_opts)
         self.cq = make_sharded_cq(s, cfg.n_slots, cfg.payload_shape)
         self._cow = (cfg.cow if cfg.cow != "auto" else
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
@@ -587,20 +619,24 @@ class RingEngine(ControlDispatch):
         mapped = vmap_shards(core, self.n_shards)
 
         if read_only:
-            # replica state, pools and health are inputs only — returning
-            # them would materialize pass-through copies (fused_step_read's
-            # rationale); only the table and the CQ round-trip.
-            def stepped(table, cq, states, pools, batch, rr, healthy):
+            # replica state, pools, watermarks and health are inputs only —
+            # returning them would materialize pass-through copies
+            # (fused_step_read's rationale); only the table and the CQ
+            # round-trip.
+            def stepped(table, cq, states, pools, page_revs, batch, rr,
+                        healthy):
                 self.trace_counts[key] += 1
-                table, cq, _, _, _, view = mapped(table, cq, states, pools,
-                                                  batch, rr, healthy)
+                table, cq, _, _, _, _, view = mapped(
+                    table, cq, states, pools, page_revs, batch, rr, healthy)
                 return table, cq, view
             fn = jax.jit(stepped, donate_argnums=(0, 1))
         else:
-            def stepped(table, cq, states, pools, batch, rr, healthy):
+            def stepped(table, cq, states, pools, page_revs, batch, rr,
+                        healthy):
                 self.trace_counts[key] += 1
-                return mapped(table, cq, states, pools, batch, rr, healthy)
-            fn = jax.jit(stepped, donate_argnums=(0, 1, 2, 3))
+                return mapped(table, cq, states, pools, page_revs, batch,
+                              rr, healthy)
+            fn = jax.jit(stepped, donate_argnums=(0, 1, 2, 3, 4))
         self._steps[key] = fn
         return fn, key
 
@@ -713,24 +749,26 @@ class RingEngine(ControlDispatch):
         if batch is None:
             return None
         if self.backend is None:
-            states, pools = (), ()
+            states, pools, page_revs = (), (), ()
             healthy = jnp.ones((self.n_shards, 1), bool)
             rr = jnp.zeros((self.n_shards,), jnp.int32)
         else:
             states, pools, healthy = self.backend.device_state()
+            page_revs = self.backend.device_page_revs()
             rr = self.backend.bump_rr()
         step, key = self._get_step(classes)
         self.dispatches += 1
         read_only = key == ("read",)
         if read_only:
             table, cq, view = step(self.frontend.table, self.cq, states,
-                                   pools, batch, rr, healthy)
+                                   pools, page_revs, batch, rr, healthy)
         else:
-            table, cq, states, pools, healthy, view = step(
-                self.frontend.table, self.cq, states, pools, batch, rr,
-                healthy)
+            table, cq, states, pools, page_revs, healthy, view = step(
+                self.frontend.table, self.cq, states, pools, page_revs,
+                batch, rr, healthy)
             if self.backend is not None:
                 self.backend.set_device_state(states, pools)
+                self.backend.set_device_page_revs(page_revs)
                 if "repl" in key:
                     # only the repl program can change health; adopting on
                     # every pump would mark the host mirror stale and make

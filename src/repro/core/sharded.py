@@ -92,7 +92,9 @@ class EnginePool(ControlDispatch):
             self.backend = ShardedReplicaGroup(
                 s, cfg.n_replicas, cfg.n_extents, cfg.max_volumes,
                 cfg.max_pages, cfg.page_blocks, cfg.payload_shape,
-                null_storage=cfg.null_storage)
+                null_storage=cfg.null_storage, transport=cfg.transport,
+                write_policy=cfg.write_policy, read_policy=cfg.read_policy,
+                transport_opts=cfg.transport_opts)
         self._cow = (cfg.cow if cfg.cow != "auto" else
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
         self._vol_rr = 0
@@ -114,20 +116,25 @@ class EnginePool(ControlDispatch):
         (S, E, ...) pools in place instead of round-tripping copies."""
         kw = dict(null_backend=self.cfg.null_backend,
                   null_storage=self.cfg.null_storage)
-        if read_only:
-            core, key, donate = step_core_read, "step_read", (0,)
-        else:
-            core, key, donate = partial(step_core, cow=self._cow), "step", \
-                (0, 1, 2)
-
         # same program, unmapped at S=1: vmap only buys the worse batched-
         # scatter lowering there (ring.vmap_shards, shared with RingEngine)
-        mapped = vmap_shards(partial(core, **kw), self.n_shards)
+        if read_only:
+            mapped = vmap_shards(partial(step_core_read, **kw),
+                                 self.n_shards)
 
-        def stepped(table, states, pools, batch, rr, healthy):
-            self.trace_counts[key] += 1
-            return mapped(table, states, pools, batch, rr, healthy)
-        return jax.jit(stepped, donate_argnums=donate)
+            def stepped(table, states, pools, batch, rr, healthy):
+                self.trace_counts["step_read"] += 1
+                return mapped(table, states, pools, batch, rr, healthy)
+            return jax.jit(stepped, donate_argnums=(0,))
+
+        mapped = vmap_shards(partial(step_core, cow=self._cow, **kw),
+                             self.n_shards)
+
+        def stepped(table, states, pools, page_revs, batch, rr, healthy):
+            self.trace_counts["step"] += 1
+            return mapped(table, states, pools, page_revs, batch, rr,
+                          healthy)
+        return jax.jit(stepped, donate_argnums=(0, 1, 2, 3))
 
     # ------------------------------------------------------------ volumes
     def create_volume(self) -> int:
@@ -209,18 +216,21 @@ class EnginePool(ControlDispatch):
         if batch is None:
             return None
         if self.backend is None:
-            states, pools = (), ()
+            states, pools, page_revs = (), (), ()
             healthy = jnp.ones((self.n_shards, 1), bool)
             rr = jnp.zeros((self.n_shards,), jnp.int32)
         else:
             states, pools, healthy = self.backend.device_state()
+            page_revs = self.backend.device_page_revs()
             rr = self.backend.bump_rr()
         self.dispatches += 1
         if any(r.kind == "write" for rs in reqs for r in rs):
-            table, states, pools, ok, reads = self._step(
-                self.frontend.table, states, pools, batch, rr, healthy)
+            table, states, pools, page_revs, ok, reads = self._step(
+                self.frontend.table, states, pools, page_revs, batch, rr,
+                healthy)
             if self.backend is not None:
                 self.backend.set_device_state(states, pools)
+                self.backend.set_device_page_revs(page_revs)
         else:
             # read-only pump: replica state untouched — input-only variant
             # (no (S, E, ...) pool pass-through copies)

@@ -1,0 +1,584 @@
+"""Controller<->replica transport: the pluggable wire between the two.
+
+Paper §III describes the Longhorn controller talking to its replicas over
+the network — every write fans out into messages that must be delivered
+and acked, reads pick one replica, and a failed replica is rebuilt by
+*streaming* data from a healthy copy. Until this module the repo's
+controller (core/replication.py) reached into replica state with direct
+method calls and rebuilt by copying the whole extent pool; there was no
+boundary a real network (or a second process, or a remote engine) could
+slot into. This is the transport fix, mirroring the ring's SQE/CQE design
+one layer down:
+
+- **WireMsg** — an opcode-tagged message (the controller->replica analogue
+  of the ring ``SQE``): WRITE / READ / the volume-control verbs / the
+  rebuild stream verbs (WATERMARKS / FETCH_DELTA / FETCH_PAGES /
+  PUSH_PAGES / ADOPT_META). One message schema for data, control AND
+  rebuild traffic — nothing moves between controller and replica except
+  through messages.
+- **Replica / StackedReplica** — the replica-side *endpoint*: owns one
+  replica's device-resident ``DBSState`` + payload pool and executes wire
+  messages against it (``StackedReplica`` holds a leading (S,) shard axis —
+  one endpoint carries this replica's slice of every engine shard, the
+  form the vmapped pool step threads).
+- **ReplicaTransport** — the delivery contract: ``post(msg) -> MsgFuture``,
+  ``tick()`` advances simulated time, per-opcode ``sent`` counters and a
+  ``pages_moved`` counter (pool rows through the rebuild stream — what the
+  delta-rebuild tests assert on).
+- **LocalTransport** — in-process immediate delivery: a ``post`` IS the
+  endpoint call, bit-identical to the pre-transport direct path.
+- **DeviceTransport** — LocalTransport over a (possibly stacked)
+  device-resident endpoint. On the fused/sharded/ring engines the *data
+  plane* never rides messages at all: the controller threads the endpoint
+  pytrees through the compiled step (``device_state``/``set_device_state``)
+  and the transport carries control + rebuild traffic only.
+- **SimNetTransport** — a simulated network: per-message latency in ticks,
+  a bounded in-flight window (posting past it blocks — backpressure),
+  injectable drop (TCP-style head-of-line retransmit, so delivery stays
+  FIFO) and reorder (deliberately breaks FIFO — fault-injection only).
+  This is what makes the write/read *policies* (core/replication.py)
+  benchmarkable: quorum-vs-all only differs when acks take time.
+
+``register_transport`` / ``make_transport`` mirror the backend registry
+(core/backends.py): transports are named factories, and everything above
+the boundary — ``EngineConfig.transport``, ``VolumeManager(transport=)`` —
+is just a name lookup here. See docs/ARCHITECTURE.md ("Replica transport").
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbs
+
+# ---------------------------------------------------------------------------
+# the wire-message opcode table (WireMsg.op)
+# ---------------------------------------------------------------------------
+MSG_CREATE = 0        # volume control (mirrored by the controller)
+MSG_SNAPSHOT = 1
+MSG_CLONE = 2
+MSG_UNMAP = 3
+MSG_DELETE = 4
+MSG_WRITE = 5         # data plane: one batched block write
+MSG_READ = 6          # data plane: one batched block read
+MSG_QUERY_REV = 7     # consistency: the replica's metadata revision
+MSG_WATERMARKS = 8    # rebuild: the replica's per-page revision watermarks
+MSG_FETCH_DELTA = 9   # rebuild: extents newer than the given watermarks
+MSG_FETCH_PAGES = 10  # rebuild: stream a chunk of pool rows out (donor)
+MSG_PUSH_PAGES = 11   # rebuild: stream a chunk of pool rows in (target)
+MSG_ADOPT_META = 12   # rebuild: adopt the donor's metadata state (commit)
+
+MSG_NAMES = ("CREATE", "SNAPSHOT", "CLONE", "UNMAP", "DELETE", "WRITE",
+             "READ", "QUERY_REV", "WATERMARKS", "FETCH_DELTA", "FETCH_PAGES",
+             "PUSH_PAGES", "ADOPT_META")
+
+
+@dataclass
+class WireMsg:
+    """One opcode-tagged controller->replica message (the SQE of this
+    boundary). Field use per opcode:
+
+    | op          | fields                                              |
+    | ----------- | --------------------------------------------------- |
+    | CREATE      | —                                                   |
+    | SNAPSHOT    | volume                                              |
+    | CLONE       | volume                                              |
+    | UNMAP       | volume, pages                                       |
+    | DELETE      | volume                                              |
+    | WRITE       | volume, pages, blocks, bits, payload, mask          |
+    | READ        | volume, pages, blocks                               |
+    | QUERY_REV   | —                                                   |
+    | WATERMARKS  | —                                                   |
+    | FETCH_DELTA | meta (the target's per-page watermarks)             |
+    | FETCH_PAGES | extents                                             |
+    | PUSH_PAGES  | extents, payload (the streamed pool rows)           |
+    | ADOPT_META  | meta (the donor's metadata ``DBSState``)            |
+
+    ``shard`` addresses one slice of a ``StackedReplica`` endpoint (None on
+    flat endpoints). One message object may be posted to many transports
+    (mirrored writes): endpoints treat it as read-only.
+    """
+    op: int
+    volume: Any = None      # scalar or (B,) volume ids
+    pages: Any = None       # (B,) int32 page ids
+    blocks: Any = None      # (B,) int32 block offsets within the page
+    bits: Any = None        # (B,) uint32 block bitmaps (precomputed once)
+    payload: Any = None     # (B, *payload) write lanes / streamed pool rows
+    mask: Any = None        # (B,) bool live write lanes
+    extents: Any = None     # (k,) int32 rebuild-stream extent ids
+    meta: Any = None        # watermarks / metadata state (rebuild stream)
+    shard: Optional[int] = None
+
+
+class MsgFuture:
+    """Completion handle for one posted message. ``done`` flips when the
+    transport delivers it (immediately for in-process transports); the
+    controller waits by ticking the owning transport."""
+
+    __slots__ = ("transport", "msg", "value", "done", "cancelled",
+                 "posted_at")
+
+    def __init__(self, transport: "ReplicaTransport", msg: WireMsg):
+        self.transport = transport
+        self.msg = msg
+        self.value: Any = None
+        self.done = False
+        self.cancelled = False
+        self.posted_at = 0
+
+    def result(self) -> Any:
+        self.transport.wait(self)
+        return self.value
+
+
+# jitted data-plane ops (fixed shapes -> compiled once per batch geometry;
+# shared by every endpoint so the compile cache is, too)
+_apply_jit = jax.jit(dbs.apply_write_ops)
+
+
+def stamp_page_rev(page_rev: jnp.ndarray, vol, pages, ok,
+                   rev) -> jnp.ndarray:
+    """Record ``rev`` as the last-write watermark of the written pages.
+
+    ``page_rev`` is a (V, P) int32 array held NEXT TO each replica's
+    ``DBSState`` (not inside it: the state's bit-exact equivalence
+    contracts compare metadata against a *sequential* reference, and any
+    write-time stamp necessarily carries the engine's batching granularity
+    — see ``dbs.DBSState.revision``). Watermarks only ever compare
+    *between replicas of one group*, which execute identical batched op
+    sequences, so batch-granular stamps are exactly as discriminating as
+    per-op ones: two replicas' stamps for a page differ iff the page was
+    written after their histories diverged. Not-ok (allocation-starved)
+    lanes scatter out of bounds and drop."""
+    drop = jnp.where(ok, pages, page_rev.shape[-1])
+    return page_rev.at[vol, drop].set(rev, mode="drop")
+
+
+@jax.jit
+def _write_jit(state, page_rev, vol, pages, bits, mask):
+    """Control-plane write + watermark stamp in one dispatch (the same
+    dispatch count as the pre-watermark path)."""
+    state, ops = dbs.write_pages(state, vol, pages, bits, mask)
+    return state, ops, stamp_page_rev(page_rev, vol, pages, ops.ok,
+                                      state.revision)
+
+
+def clone_page_rev(page_rev: jnp.ndarray, src_vol, new_vol) -> jnp.ndarray:
+    """A clone inherits the SOURCE's watermark row (vmap-safe; no-op when
+    the clone failed, ``new_vol < 0``).
+
+    Without this, extents reachable only through the clone's table escape
+    delta selection: overwrite a post-fail page of the source (CoW to a
+    fresh extent) and the old extent's sole table reference is the clone's
+    row, whose zero watermarks would never beat the target's — the rebuilt
+    replica would silently serve the clone stale pre-fail data. The shared
+    extents' data is exactly as old as the source's stamps say."""
+    safe = jnp.maximum(new_vol, 0)
+    row = jnp.where(new_vol >= 0, page_rev[jnp.asarray(src_vol)],
+                    page_rev[safe])
+    return page_rev.at[safe].set(row)
+
+
+@jax.jit
+def _read_jit(state, pool, vol, pages, block_offsets):
+    ext = dbs.read_resolve(state, vol, pages)
+    got = pool[jnp.maximum(ext, 0), block_offsets]
+    # holes (never-written / unmapped pages) read as zeros — the clamped
+    # gather would otherwise leak extent 0's payload (fused._rr_gather holds
+    # the same contract; core/blockdev.py byte equivalence relies on it)
+    return jnp.where((ext >= 0).reshape(ext.shape + (1,) * (got.ndim - 1)),
+                     got, 0)
+
+
+def _delta_extents(table: jnp.ndarray, page_rev: jnp.ndarray,
+                   target_watermarks) -> np.ndarray:
+    """Extents the target is missing: every extent backing a page whose
+    per-page revision watermark is newer than the target's. Healthy
+    replicas execute identical op sequences (deterministic allocation), so
+    a page not written since the target's watermark maps to an extent whose
+    content the target already holds bit-for-bit — only the newer ones need
+    to cross the wire. One host fetch per rebuild (rebuild is rare)."""
+    newer = (page_rev > target_watermarks) & (table >= 0)
+    exts = np.asarray(jax.device_get(jnp.where(newer, table, -1)))
+    return np.unique(exts[exts >= 0]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# replica endpoints (the server side of the boundary)
+# ---------------------------------------------------------------------------
+@dataclass
+class Replica:
+    """One replica endpoint: device-resident metadata state + payload pool
+    + per-page revision watermarks, executing wire messages. ``healthy`` is
+    the *controller's* mark (it rides here for the legacy
+    ``group.replicas[i].healthy`` surface — the endpoint itself never
+    consults it: a replica doesn't know it failed)."""
+
+    state: dbs.DBSState
+    pool: jnp.ndarray            # (E, page_blocks, *payload)
+    page_rev: jnp.ndarray        # (V, P) int32 last-write watermarks
+    healthy: bool = True
+    null_storage: bool = False
+
+    def execute(self, msg: WireMsg) -> Any:
+        op = msg.op
+        if op == MSG_WRITE:
+            self.state, ops, self.page_rev = _write_jit(
+                self.state, self.page_rev, msg.volume, msg.pages, msg.bits,
+                msg.mask)
+            if not self.null_storage:
+                self.pool = _apply_jit(self.pool, ops, msg.payload,
+                                       msg.blocks)
+            return None
+        if op == MSG_READ:
+            return _read_jit(self.state, self.pool, msg.volume, msg.pages,
+                             msg.blocks)
+        if op == MSG_CREATE:
+            self.state, vid = dbs.create_volume(self.state)
+            return vid
+        if op == MSG_SNAPSHOT:
+            self.state, sid = dbs.snapshot(self.state, jnp.int32(msg.volume))
+            return sid
+        if op == MSG_CLONE:
+            self.state, vid = dbs.clone(self.state, jnp.int32(msg.volume))
+            self.page_rev = clone_page_rev(self.page_rev,
+                                           jnp.int32(msg.volume), vid)
+            return vid
+        if op == MSG_UNMAP:
+            self.state = dbs.unmap(self.state, jnp.int32(msg.volume),
+                                   msg.pages)
+            return None
+        if op == MSG_DELETE:
+            self.state = dbs.delete_volume(self.state, jnp.int32(msg.volume))
+            return None
+        if op == MSG_QUERY_REV:
+            return self.state.revision       # device scalar; caller batches
+        if op == MSG_WATERMARKS:
+            return self.page_rev
+        if op == MSG_FETCH_DELTA:
+            return (_delta_extents(self.state.table, self.page_rev,
+                                   msg.meta),
+                    (self.state, self.page_rev))
+        if op == MSG_FETCH_PAGES:
+            return self.pool[msg.extents]
+        if op == MSG_PUSH_PAGES:
+            self.pool = self.pool.at[msg.extents].set(msg.payload)
+            return None
+        if op == MSG_ADOPT_META:
+            # decouple from the donor's live arrays: both replicas' states
+            # are later DONATED to the fused step, and one buffer donated
+            # twice is undefined
+            meta_state, meta_pr = msg.meta
+            self.state = jax.tree.map(jnp.copy, meta_state)
+            self.page_rev = jnp.copy(meta_pr)
+            return None
+        raise ValueError(f"unknown wire opcode {op}")
+
+
+@dataclass
+class StackedReplica:
+    """One replica's endpoint across S engine shards: every leaf carries a
+    leading (S,) axis and messages address one shard's slice (``msg.shard``).
+    This is the device-resident form the vmapped pool step threads
+    (core/sharded.py) — the transport carries control and rebuild traffic;
+    foreground I/O rides the compiled program."""
+
+    state: dbs.DBSState          # leaves (S, ...)
+    pool: jnp.ndarray            # (S, E, page_blocks, *payload)
+    page_rev: jnp.ndarray        # (S, V, P) int32 last-write watermarks
+    null_storage: bool = False
+
+    def _slice(self, s: int) -> dbs.DBSState:
+        return jax.tree.map(lambda x: x[s], self.state)
+
+    def _write_back(self, s: int, st: dbs.DBSState) -> None:
+        self.state = jax.tree.map(lambda full, new: full.at[s].set(new),
+                                  self.state, st)
+
+    def execute(self, msg: WireMsg) -> Any:
+        op, s = msg.op, msg.shard
+        if op == MSG_QUERY_REV:
+            return self.state.revision       # (S,) stacked; caller slices
+        if s is None:
+            raise ValueError("stacked endpoints need msg.shard")
+        if op == MSG_WRITE:
+            st, ops, pr = _write_jit(self._slice(s), self.page_rev[s],
+                                     msg.volume, msg.pages, msg.bits,
+                                     msg.mask)
+            self._write_back(s, st)
+            self.page_rev = self.page_rev.at[s].set(pr)
+            if not self.null_storage:
+                self.pool = self.pool.at[s].set(_apply_jit(
+                    self.pool[s], ops, msg.payload, msg.blocks))
+            return None
+        if op == MSG_READ:
+            return _read_jit(self._slice(s), self.pool[s], msg.volume,
+                             msg.pages, msg.blocks)
+        if op in (MSG_CREATE, MSG_SNAPSHOT, MSG_CLONE, MSG_UNMAP,
+                  MSG_DELETE):
+            st = self._slice(s)
+            if op == MSG_CREATE:
+                st, out = dbs.create_volume(st)
+            elif op == MSG_SNAPSHOT:
+                st, out = dbs.snapshot(st, jnp.int32(msg.volume))
+            elif op == MSG_CLONE:
+                st, out = dbs.clone(st, jnp.int32(msg.volume))
+                self.page_rev = self.page_rev.at[s].set(clone_page_rev(
+                    self.page_rev[s], jnp.int32(msg.volume), out))
+            elif op == MSG_UNMAP:
+                st, out = dbs.unmap(st, jnp.int32(msg.volume), msg.pages), None
+            else:
+                st, out = dbs.delete_volume(st, jnp.int32(msg.volume)), None
+            self._write_back(s, st)
+            return out
+        if op == MSG_WATERMARKS:
+            return self.page_rev[s]
+        if op == MSG_FETCH_DELTA:
+            sliced = self._slice(s)
+            pr = self.page_rev[s]
+            return _delta_extents(sliced.table, pr, msg.meta), (sliced, pr)
+        if op == MSG_FETCH_PAGES:
+            return self.pool[s][msg.extents]
+        if op == MSG_PUSH_PAGES:
+            self.pool = self.pool.at[s, msg.extents].set(msg.payload)
+            return None
+        if op == MSG_ADOPT_META:
+            # msg.meta is an UNSTACKED (state, page_rev) pair (the donor's
+            # shard slice); .at[s].set materialises fresh target arrays, so
+            # no buffer is shared with the donor (donation safety)
+            meta_state, meta_pr = msg.meta
+            self._write_back(s, meta_state)
+            self.page_rev = self.page_rev.at[s].set(meta_pr)
+            return None
+        raise ValueError(f"unknown wire opcode {op}")
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+class ReplicaTransport:
+    """The delivery contract between controller and one replica endpoint.
+
+    ``post`` enqueues a message and returns a future; ``tick`` advances
+    simulated time by one step (a no-op for in-process transports);
+    ``wait``/``drain`` tick until a future (or everything) delivers.
+    ``sent`` counts posted messages per opcode name and ``pages_moved``
+    counts pool rows through the rebuild stream — the counters the
+    delta-rebuild acceptance tests assert on. ``latency_ewma`` is the
+    observed delivery latency (ticks) the latency-weighted read policy
+    consults."""
+
+    name = "?"
+    in_process = True            # delivery is an immediate endpoint call
+
+    # livelock guard for wait/drain: generous, but finite — a drop rate
+    # near 1.0 on a SimNetTransport would otherwise spin forever
+    MAX_WAIT_TICKS = 1_000_000
+
+    def __init__(self, endpoint):
+        self.endpoint = endpoint
+        self.sent: collections.Counter = collections.Counter()
+        self.delivered = 0
+        self.retransmits = 0
+        self.pages_moved = 0
+        self.latency_ewma = 0.0
+
+    # -- accounting shared by every implementation ---------------------------
+    def _account(self, msg: WireMsg) -> None:
+        self.sent[MSG_NAMES[msg.op]] += 1
+        if msg.op in (MSG_FETCH_PAGES, MSG_PUSH_PAGES):
+            self.pages_moved += int(len(msg.extents))
+
+    def messages_sent(self) -> int:
+        return sum(self.sent.values())
+
+    # -- the delivery surface ------------------------------------------------
+    def post(self, msg: WireMsg) -> MsgFuture:          # pragma: no cover
+        raise NotImplementedError
+
+    def call(self, msg: WireMsg) -> Any:
+        """Synchronous convenience: post and wait for delivery."""
+        return self.post(msg).result()
+
+    def tick(self) -> None:
+        """Advance simulated time one step (no-op in-process)."""
+
+    def pending(self) -> int:
+        return 0
+
+    def wait(self, fut: MsgFuture) -> None:
+        for _ in range(self.MAX_WAIT_TICKS):
+            if fut.done:
+                return
+            self.tick()
+        raise RuntimeError(f"{self.name} transport livelocked waiting for "
+                           f"{MSG_NAMES[fut.msg.op]} (drop rate too high?)")
+
+    def drain(self) -> None:
+        for _ in range(self.MAX_WAIT_TICKS):
+            if not self.pending():
+                return
+            self.tick()
+        raise RuntimeError(f"{self.name} transport livelocked draining")
+
+    def cancel_pending(self) -> int:
+        """Tear down undelivered messages (the controller cutting the
+        connection to a replica it just declared failed — in-flight ops to
+        a dead replica are lost, and rebuild resyncs whatever landed)."""
+        return 0
+
+
+class LocalTransport(ReplicaTransport):
+    """In-process delivery: ``post`` executes the message on the endpoint
+    immediately — the same jitted dispatch sequence, in the same order, as
+    the pre-transport direct-call path (bit-identical by construction)."""
+
+    name = "local"
+
+    def post(self, msg: WireMsg) -> MsgFuture:
+        self._account(msg)
+        fut = MsgFuture(self, msg)
+        fut.value = self.endpoint.execute(msg)
+        fut.done = True
+        self.delivered += 1
+        return fut
+
+
+class DeviceTransport(LocalTransport):
+    """LocalTransport over a device-resident (optionally shard-stacked)
+    endpoint. The engines whose data plane is a compiled program
+    (fused/sharded/ring) thread the endpoint pytrees through the step
+    directly — this transport carries their control-plane and rebuild
+    traffic, and the stacked endpoint IS what ``device_state`` exposes."""
+
+    name = "device"
+
+
+class SimNetTransport(ReplicaTransport):
+    """A simulated network link to one replica.
+
+    - every message is delivered ``latency`` ticks after it was posted,
+    - at most ``window`` messages may be in flight; posting past the window
+      *blocks* (ticks until a slot frees) — bounded-in-flight backpressure,
+    - ``drop`` loses a delivery attempt with the given probability; the
+      message stays at the queue head and redelivers after another latency
+      period (TCP-style retransmit: FIFO order survives, ``retransmits``
+      counts the loss),
+    - ``reorder`` swaps the two head messages with the given probability
+      when both are due — deliberate FIFO breakage for fault-injection
+      tests (defaults off; ordering guarantees do not survive it).
+
+    Deterministic under ``seed``. ``latency_ewma`` tracks observed delivery
+    latency for the latency-weighted read policy.
+    """
+
+    name = "simnet"
+    in_process = False
+
+    def __init__(self, endpoint, *, latency: int = 2, window: int = 8,
+                 drop: float = 0.0, reorder: float = 0.0, seed: int = 0):
+        super().__init__(endpoint)
+        if latency < 1:
+            raise ValueError(f"latency must be >= 1 tick, got {latency}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.latency = latency
+        self.window = window
+        self.drop = drop
+        self.reorder = reorder
+        self.rng = np.random.default_rng(seed)
+        self.now = 0
+        self.queue: collections.deque = collections.deque()  # [fut, due]
+
+    def post(self, msg: WireMsg) -> MsgFuture:
+        for _ in range(self.MAX_WAIT_TICKS):
+            if len(self.queue) < self.window:
+                break
+            self.tick()                      # backpressure: window is full
+        else:
+            raise RuntimeError("simnet window never freed (livelock)")
+        self._account(msg)
+        fut = MsgFuture(self, msg)
+        fut.posted_at = self.now
+        self.queue.append([fut, self.now + self.latency])
+        return fut
+
+    def tick(self) -> None:
+        self.now += 1
+        while self.queue and self.queue[0][1] <= self.now:
+            if (self.reorder and len(self.queue) > 1
+                    and self.queue[1][1] <= self.now
+                    and self.rng.random() < self.reorder):
+                self.queue[0], self.queue[1] = self.queue[1], self.queue[0]
+            entry = self.queue[0]
+            if self.drop and self.rng.random() < self.drop:
+                # lost on the wire: retransmit after another latency period;
+                # later messages wait behind it (in-order delivery)
+                self.retransmits += 1
+                entry[1] = self.now + self.latency
+                break
+            self.queue.popleft()
+            fut = entry[0]
+            fut.value = self.endpoint.execute(fut.msg)
+            fut.done = True
+            self.delivered += 1
+            lat = float(self.now - fut.posted_at)
+            self.latency_ewma = (lat if self.delivered == 1 else
+                                 0.8 * self.latency_ewma + 0.2 * lat)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def cancel_pending(self) -> int:
+        n = len(self.queue)
+        for fut, _ in self.queue:
+            fut.done = True
+            fut.cancelled = True
+        self.queue.clear()
+        return n
+
+
+# ---------------------------------------------------------------------------
+# the registry (the backend-registry pattern applied to transports)
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[..., ReplicaTransport]] = {}
+
+
+def register_transport(name: str, factory: Optional[Callable] = None):
+    """Register ``factory(endpoint, **opts) -> ReplicaTransport`` under
+    ``name``. Usable directly or as a decorator; re-registering replaces
+    the factory (embedders can shadow a built-in)."""
+    if factory is None:
+        def deco(f):
+            _REGISTRY[name] = f
+            return f
+        return deco
+    _REGISTRY[name] = factory
+    return factory
+
+
+def available_transports() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_transport(name: str, endpoint, **opts) -> ReplicaTransport:
+    """Instantiate the transport registered under ``name`` for one replica
+    endpoint. ``opts`` are implementation knobs (simnet: latency / window /
+    drop / reorder / seed)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {name!r} (registered: "
+            f"{', '.join(available_transports())})") from None
+    return factory(endpoint, **opts)
+
+
+register_transport("local", LocalTransport)
+register_transport("device", DeviceTransport)
+register_transport("simnet", SimNetTransport)

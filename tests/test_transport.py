@@ -1,0 +1,492 @@
+"""The controller<->replica transport layer (core/transport.py) and the
+policy objects over it (core/replication.py).
+
+Contracts:
+
+1. **registry** — local/device/simnet are registered; unknown names raise;
+   embedders can register their own transport.
+2. **wire accounting** — every controller->replica interaction is a counted
+   message; nothing bypasses the boundary on the host-orchestrated path.
+3. **delta rebuild** — after a partial-overwrite workload the streamed
+   rebuild moves EXACTLY the post-fail pages (strictly fewer than a full
+   copy), on the host group, the fused engine (in-program watermark
+   stamping), and the sharded pool (per-shard slices); content is
+   bit-identical to the donor afterwards.
+4. **simnet** — latency-delayed delivery, bounded-window backpressure,
+   FIFO-preserving drop/retransmit, deterministic under seed.
+5. **write/read policies** — quorum acks on a majority (straggler catches
+   up over FIFO), async is write-behind, latency-weighted reads avoid the
+   slow link; every policy converges to the ``all`` end state after drain.
+6. **config threading** — EngineConfig/VolumeManager reach the group;
+   in-program backends (fused/sharded/ring) reject host-only policies.
+7. satellites — ``IOFuture.result()`` caches (no re-assembly, no re-flush),
+   ``ReplicaGroup.consistent()`` fetches once, ``VolumeManager`` context
+   manager drains on exit and rejects I/O after ``close()``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineConfig, Request, transport
+from repro.core.blockdev import VolumeManager
+from repro.core.replication import ReplicaGroup
+from repro.core.transport import (MSG_WRITE, LocalTransport, SimNetTransport,
+                                  WireMsg, available_transports,
+                                  register_transport)
+
+PAY = (4,)
+
+
+def _group(**kw):
+    base = dict(n_replicas=2, n_extents=256, max_volumes=4, max_pages=64,
+                page_blocks=8, payload_shape=PAY)
+    base.update(kw)
+    return ReplicaGroup(**base)
+
+
+def _w(g, vol, pages, val):
+    pages = jnp.asarray(pages, jnp.int32)
+    g.write(vol, pages, jnp.zeros(pages.shape, jnp.int32),
+            jnp.full((pages.shape[0],) + PAY, float(val)))
+
+
+def _r(g, vol, pages):
+    pages = jnp.asarray(pages, jnp.int32)
+    return np.asarray(jax.device_get(
+        g.read(vol, pages, jnp.zeros(pages.shape, jnp.int32))))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_names_and_unknown():
+    names = available_transports()
+    assert {"local", "device", "simnet"} <= set(names)
+    with pytest.raises(ValueError, match="unknown transport"):
+        _group(transport="carrier-pigeon")
+
+
+def test_registry_custom_transport():
+    calls = []
+
+    @register_transport("counting-local")
+    class CountingLocal(LocalTransport):
+        def post(self, msg):
+            calls.append(msg.op)
+            return super().post(msg)
+
+    try:
+        g = _group(transport="counting-local")
+        vol = g.create_volume()
+        _w(g, vol, [0, 1], 1.0)
+        assert calls and MSG_WRITE in calls
+        np.testing.assert_allclose(_r(g, vol, [0, 1]), 1.0)
+    finally:
+        transport._REGISTRY.pop("counting-local", None)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="write_policy"):
+        _group(write_policy="most")
+    with pytest.raises(ValueError, match="read_policy"):
+        _group(read_policy="nearest")
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+def test_every_interaction_is_a_counted_message():
+    g = _group()
+    vol = g.create_volume()
+    _w(g, vol, [0, 1, 2], 1.0)
+    _r(g, vol, [0])
+    g.snapshot(vol)
+    g.unmap(vol, jnp.asarray([2], jnp.int32))
+    assert g.consistent()
+    for i, t in enumerate(g.transports):
+        assert t.sent["CREATE"] == 1
+        assert t.sent["WRITE"] == 1          # one mirrored batch each
+        assert t.sent["SNAPSHOT"] == 1
+        assert t.sent["UNMAP"] == 1
+        assert t.sent["QUERY_REV"] == 1      # consistent()
+    # the single read went to exactly one replica (round-robin)
+    assert sum(t.sent["READ"] for t in g.transports) == 1
+
+
+# ---------------------------------------------------------------------------
+# delta rebuild (the ISSUE 5 acceptance assertion)
+# ---------------------------------------------------------------------------
+def test_delta_rebuild_moves_only_post_fail_pages():
+    g = _group()
+    vol = g.create_volume()
+    _w(g, vol, list(range(32)), 1.0)         # 32 allocated extents
+    g.fail(1)
+    _w(g, vol, [3, 4, 5, 6, 40], 7.0)        # 4 overwrites + 1 new page
+    moved0 = g.transports[1].pages_moved
+    g.rebuild(1)
+    moved = g.transports[1].pages_moved - moved0
+    # exactly the 5 post-fail pages crossed the wire — STRICTLY fewer than
+    # the 33 allocated extents a full copy would stream
+    assert moved == 5
+    assert moved < 33
+    assert g.consistent()
+    # the rebuilt replica serves the missed writes (force reads onto it)
+    g.fail(0)
+    np.testing.assert_allclose(_r(g, vol, [3, 40]), 7.0)
+    np.testing.assert_allclose(_r(g, vol, [0, 31]), 1.0)
+    g.rebuild(0)
+
+
+def test_delta_rebuild_covers_clone_shared_extents():
+    """Regression: a clone's watermark row must inherit the source's
+    (``transport.clone_page_rev``). Otherwise an extent whose only table
+    reference is the clone's row (source CoW-diverged after the clone)
+    never beats the target's zero watermarks, and the rebuilt replica
+    silently serves the clone stale pre-fail data while ``consistent()``
+    still passes."""
+    g = _group()
+    vol = g.create_volume()
+    _w(g, vol, [0], 1.0)
+    g.fail(1)
+    _w(g, vol, [0], 2.0)                     # replica 1 misses this
+    cvol = g.clone(vol)                      # clone shares page 0's extent
+    _w(g, vol, [0], 3.0)                     # source CoWs to a new extent
+    g.rebuild(1)
+    assert g.consistent()
+    g.fail(0)                                # force reads onto the rebuilt
+    np.testing.assert_allclose(_r(g, vol, [0]), 3.0)
+    np.testing.assert_allclose(_r(g, cvol, [0]), 2.0)
+    g.rebuild(0)
+
+
+def test_inband_clone_then_host_delta_rebuild():
+    """The same clone hazard through the ring's IN-BAND clone opcode: the
+    control-tail scan carries the watermark arrays so the clone row copy
+    happens inside the compiled program."""
+    eng = Engine(EngineConfig(comm="ring", n_shards=1, storage="dbs",
+                              payload_shape=PAY, n_extents=256, max_pages=64,
+                              batch=16))
+    vol = eng.create_volume()
+    pay = jnp.ones(PAY)
+
+    def write(page, val):
+        eng.submit(Request(req_id=page, kind="write", volume=vol, page=page,
+                           block=0, payload=val * pay))
+        eng.drain()
+
+    write(0, 1.0)
+    eng.pool.backend.fail(0, 1)
+    write(0, 2.0)                            # replica 1 misses this
+    cvol = eng.clone(vol)                    # in-band CLONE SQE
+    assert cvol >= 0
+    write(0, 3.0)                            # source CoWs away
+    eng.pool.backend.rebuild(0, 1)           # host-side streamed delta
+    assert eng.pool.backend.consistent()
+    eng.pool.backend.fail(0, 0)              # rebuilt replica must serve
+    blk = jnp.zeros((1,), jnp.int32)
+    np.testing.assert_allclose(np.asarray(eng.pool.read_volume(
+        vol, jnp.asarray([0], jnp.int32), blk))[:, 0], 3.0)
+    np.testing.assert_allclose(np.asarray(eng.pool.read_volume(
+        cvol, jnp.asarray([0], jnp.int32), blk))[:, 0], 2.0)
+    eng.pool.backend.rebuild(0, 0)
+
+
+def test_delta_rebuild_empty_delta_moves_nothing():
+    g = _group()
+    vol = g.create_volume()
+    _w(g, vol, [0, 1], 2.0)
+    g.fail(0)
+    g.rebuild(0)                             # nothing written while failed
+    assert g.transports[0].pages_moved == 0
+    assert g.consistent()
+
+
+def test_delta_rebuild_after_fused_engine_traffic():
+    """The fused step stamps watermarks IN-PROGRAM; the host-side streamed
+    rebuild must see them."""
+    eng = Engine(EngineConfig(comm="fused", storage="dbs", payload_shape=PAY,
+                              n_extents=256, max_pages=64, batch=16))
+    vol = eng.create_volume()
+    pay = jnp.ones(PAY)
+    for i in range(24):
+        eng.submit(Request(req_id=i, kind="write", volume=vol, page=i,
+                           block=0, payload=pay))
+    eng.drain()
+    eng.control("fail", replica=1)
+    for i in range(6):                       # replica 1 misses these
+        eng.submit(Request(req_id=100 + i, kind="write", volume=vol,
+                           page=i, block=0, payload=2 * pay))
+    eng.drain()
+    g = eng.backend
+    moved0 = g.transports[1].pages_moved
+    eng.control("rebuild", replica=1)
+    assert g.transports[1].pages_moved - moved0 == 6
+    assert g.consistent()
+    # rebuilt replica's mapped extents are bit-identical to the donor's
+    table = np.asarray(jax.device_get(g.replicas[0].state.table))
+    ids = np.unique(table[table >= 0])
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(g.replicas[0].pool[ids])),
+        np.asarray(jax.device_get(g.replicas[1].pool[ids])))
+
+
+def test_delta_rebuild_sharded_pool():
+    """Per-shard streamed delta through the stacked device transport, after
+    vmapped in-program traffic."""
+    eng = Engine(EngineConfig(comm="sharded", n_shards=2, storage="dbs",
+                              payload_shape=PAY, n_extents=256, max_pages=64,
+                              batch=16))
+    vols = [eng.create_volume() for _ in range(2)]
+    pay = jnp.ones(PAY)
+    for i in range(16):
+        for v in vols:
+            eng.submit(Request(req_id=i * 2 + v, kind="write", volume=v,
+                               page=i, block=0, payload=pay))
+    eng.drain()
+    pool = eng.pool
+    sick_shard = vols[0] % 2
+    pool.backend.fail(sick_shard, 1)
+    for i in range(4):                       # shard 0's replica 1 misses
+        eng.submit(Request(req_id=900 + i, kind="write", volume=vols[0],
+                           page=i, block=0, payload=3 * pay))
+    eng.drain()
+    t1 = pool.backend.transports[1]
+    moved0 = t1.pages_moved
+    pool.backend.rebuild(sick_shard, 1)
+    assert t1.pages_moved - moved0 == 4
+    assert pool.backend.consistent()
+    # other shard untouched by the rebuild: its two replica slices agree
+    other = 1 - sick_shard
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(pool.backend.pools[0][other])),
+        np.asarray(jax.device_get(pool.backend.pools[1][other])))
+
+
+# ---------------------------------------------------------------------------
+# simnet semantics
+# ---------------------------------------------------------------------------
+def test_simnet_latency_and_window():
+    ep_g = _group()                          # donor of a real endpoint
+    t = SimNetTransport(ep_g.replicas[0], latency=3, window=2)
+    f1 = t.post(WireMsg(op=transport.MSG_QUERY_REV))
+    f2 = t.post(WireMsg(op=transport.MSG_QUERY_REV))
+    assert not f1.done and t.pending() == 2
+    t.tick(), t.tick()
+    assert not f1.done                       # latency 3: not yet
+    t.tick()
+    assert f1.done and f2.done
+    # window backpressure: a third post while two are queued must tick
+    # until a slot frees (here: immediately, queue already drained)
+    f3 = t.post(WireMsg(op=transport.MSG_QUERY_REV))
+    assert t.pending() == 1
+    t.drain()
+    assert f3.done and t.delivered == 3
+
+
+def test_simnet_drop_retransmits_in_order():
+    g = _group(transport="simnet",
+               transport_opts=dict(latency=1, window=4, drop=0.3, seed=7))
+    vol = g.create_volume()
+    for i in range(8):
+        _w(g, vol, [i], float(i + 1))        # policy "all": waits acks
+    g.drain_transports()
+    assert g.consistent()
+    for i in range(8):
+        np.testing.assert_allclose(_r(g, vol, [i]), float(i + 1))
+    assert any(t.retransmits > 0 for t in g.transports), \
+        "drop=0.3 over 30+ deliveries should have retransmitted"
+
+
+def test_simnet_reorder_injection_delivers_everything():
+    g = _group(transport="simnet", write_policy="async",
+               transport_opts=dict(latency=1, window=8, reorder=0.5,
+                                   seed=3))
+    vol = g.create_volume()
+    for i in range(6):
+        _w(g, vol, [i], 1.0)                 # async: queues build up
+    g.drain_transports()
+    for t in g.transports:
+        assert t.pending() == 0 and t.delivered >= 7   # CREATE + 6 writes
+
+
+# ---------------------------------------------------------------------------
+# write/read policies
+# ---------------------------------------------------------------------------
+def _straggler_group(**kw):
+    return _group(n_replicas=3, transport="simnet",
+                  transport_opts=dict(latency=[1, 1, 6], window=4), **kw)
+
+
+def test_quorum_acks_on_majority_then_converges():
+    g = _straggler_group(write_policy="quorum")
+    vol = g.create_volume()
+    _w(g, vol, [0, 1], 5.0)
+    # the two fast links acked; the straggler still holds the write
+    assert g.transports[2].pending() >= 1
+    g.drain_transports()
+    assert g.consistent()
+    for rep in range(3):                     # every replica converged
+        g._rr = rep                          # steer the rr pick
+        np.testing.assert_allclose(_r(g, vol, [0, 1]), 5.0)
+
+
+def test_async_is_write_behind_and_fifo_read_sees_own_link():
+    g = _straggler_group(write_policy="async")
+    vol = g.create_volume()
+    _w(g, vol, [0], 9.0)
+    assert all(t.pending() >= 1 for t in g.transports)   # acked at post
+    # a read through any link queues BEHIND that link's write (FIFO)
+    np.testing.assert_allclose(_r(g, vol, [0]), 9.0)
+    g.drain_transports()
+    assert g.consistent()
+
+
+def test_latency_weighted_reads_avoid_the_straggler():
+    g = _straggler_group(read_policy="latency")
+    vol = g.create_volume()
+    _w(g, vol, [0], 1.0)                     # seeds every link's ewma
+    before = g.transports[2].sent["READ"]
+    for _ in range(12):
+        _r(g, vol, [0])
+    assert g.transports[2].sent["READ"] == before, \
+        "latency policy must not route reads to the 6x-slower link"
+    # and the fast links share them (tie-broken round-robin)
+    assert g.transports[0].sent["READ"] > 0
+    assert g.transports[1].sent["READ"] > 0
+
+
+def test_policies_match_all_end_state():
+    """Every policy converges to the same replica contents as ``all``."""
+    ref = _group(n_replicas=3)
+    states = {}
+    for policy in ("all", "quorum", "async"):
+        g = _straggler_group(write_policy=policy)
+        for grp in ((ref,) if policy == "all" else ()) + (g,):
+            vol = grp.create_volume()
+            for i in range(6):
+                _w(grp, vol, [i % 4], float(i))
+            grp.drain_transports()
+        states[policy] = [np.asarray(jax.device_get(r.pool))
+                          for r in g.replicas]
+        assert g.consistent()
+    for policy in ("quorum", "async"):
+        for a, b in zip(states["all"], states[policy]):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# config threading
+# ---------------------------------------------------------------------------
+def test_engineconfig_threads_transport_to_the_group():
+    eng = Engine(EngineConfig(comm="slots", storage="dbs", payload_shape=PAY,
+                              transport="simnet", write_policy="quorum",
+                              read_policy="latency", n_replicas=3,
+                              transport_opts=dict(latency=2, window=16)))
+    g = eng.backend
+    assert all(isinstance(t, SimNetTransport) for t in g.transports)
+    assert g.write_policy == "quorum" and g.read_policy == "latency"
+    vol = eng.create_volume()
+    pay = jnp.ones(PAY)
+    for i in range(8):
+        eng.submit(Request(req_id=i, kind="write", volume=vol, page=i,
+                           block=0, payload=pay))
+        eng.submit(Request(req_id=100 + i, kind="read", volume=vol, page=i,
+                           block=0))
+    assert eng.drain() == 16
+
+
+def test_inprogram_backends_reject_host_policies():
+    for comm in ("fused", "sharded", "ring"):
+        with pytest.raises(ValueError, match="write_policy|IN-PROGRAM"):
+            Engine(EngineConfig(comm=comm, storage="dbs",
+                                write_policy="quorum"))
+        with pytest.raises(ValueError):
+            Engine(EngineConfig(comm=comm, storage="dbs",
+                                read_policy="latency"))
+
+
+def test_volumemanager_threads_transport():
+    with VolumeManager(backend="slots", transport="simnet",
+                       write_policy="quorum", n_replicas=3, payload_elems=8,
+                       page_blocks=4, max_pages=16,
+                       transport_opts=dict(latency=1)) as vm:
+        g = vm.engine.backend
+        assert all(isinstance(t, SimNetTransport) for t in g.transports)
+        v = vm.create()
+        v.write(10, b"over the wire")
+        assert v.read(10, 13) == b"over the wire"
+
+
+# ---------------------------------------------------------------------------
+# satellites
+# ---------------------------------------------------------------------------
+def test_iofuture_result_is_cached(monkeypatch):
+    """Repeated ``result()`` returns the cached assembly: no re-assemble,
+    no re-flush (ISSUE 5 satellite)."""
+    vm = VolumeManager(backend="slots", payload_elems=8, page_blocks=4,
+                       max_pages=16)
+    v = vm.create()
+    v.write(0, b"cache me")
+    fut = v.pread(0, 8)
+    first = fut.result()
+    assert first == b"cache me"
+    flushes = []
+    monkeypatch.setattr(vm, "flush",
+                        lambda: (flushes.append(1), 0)[1])
+    # poison the underlying requests: a re-assembly would now differ
+    for r in fut._reqs:
+        r.result = None
+    assert fut.result() is first
+    assert fut.result() == b"cache me"
+    assert flushes == [], "cached result must not drive the pump again"
+    assert fut.done()
+
+
+def test_consistent_batches_revision_fetch(monkeypatch):
+    """One device_get for the whole group, not one per healthy replica
+    (ISSUE 5 satellite)."""
+    g = _group(n_replicas=4)
+    vol = g.create_volume()
+    _w(g, vol, [0, 1], 1.0)
+    gets = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: (gets.append(1), real(x))[1])
+    assert g.consistent()
+    assert len(gets) == 1, f"consistent() fetched {len(gets)} times"
+
+
+def test_volumemanager_close_drains_inflight():
+    """Context-manager exit drains in-flight I/O; the closed manager
+    rejects new submissions but keeps futures resolvable (ISSUE 5
+    satellite)."""
+    with VolumeManager(backend="ring", payload_elems=8, page_blocks=4,
+                       max_pages=16) as vm:
+        v = vm.create()
+        fut = v.pwrite(0, b"bye")
+        rfut = v.pread(0, 3)
+        assert not fut.done()                # still queued, no flush yet
+    assert vm.closed
+    assert fut.done() and rfut.done()        # close() drained them
+    assert rfut.result() == b"bye"
+    assert vm.close() == 0                   # idempotent
+    with pytest.raises(ValueError, match="closed"):
+        v.pwrite(0, b"nope")
+    with pytest.raises(ValueError, match="closed"):
+        vm.pread(v, 0, 1)
+    with pytest.raises(ValueError, match="closed"):
+        vm.create()
+    assert vm.flush() == 0                   # flush stays a callable no-op
+
+
+def test_close_drains_write_behind_transports():
+    vm = VolumeManager(backend="slots", transport="simnet",
+                       write_policy="async", payload_elems=8, page_blocks=4,
+                       max_pages=16, transport_opts=dict(latency=3))
+    v = vm.create()
+    v.pwrite(0, b"straggler")
+    vm.close()
+    g = vm.engine.backend
+    assert all(t.pending() == 0 for t in g.transports)
+    assert g.consistent()
