@@ -53,7 +53,7 @@ import json
 import sys
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -448,6 +448,23 @@ def run_replication(*, n_requests: int = 512, payload_elems: int = 64,
     return out
 
 
+def run_trace(*, smoke: bool = False, trace_seed: int = 0,
+              chaos_seed: int = 0, **_ignored) -> Dict[str, Any]:
+    """The chaos-harness scenario matrix (ISSUE 6): trace-driven load with
+    byte-oracle checking over the named ``repro.harness.SCENARIOS`` catalog,
+    plus the replay-determinism double run. Returns the BENCH ``trace``
+    document; ``check_trace_gates`` (re-exported from the harness) gates
+    it under ``--check``."""
+    from repro.harness import run_matrix
+    return run_matrix(smoke=smoke, trace_seed=trace_seed,
+                      chaos_seed=chaos_seed)
+
+
+def check_trace_gates(trace: Dict[str, Any]) -> List[str]:
+    from repro.harness import check_trace_gates as _gates
+    return _gates(trace)
+
+
 def check_replication_gate(repl: Dict[str, Dict[str, float]],
                            ladder: Dict[str, Dict[str, float]],
                            floor: float = 0.9) -> List[str]:
@@ -603,6 +620,7 @@ def main(argv=None) -> int:
     mixed = run_mixed_control(**kw)
     blockdev = run_blockdev(**kw)
     replication = run_replication(kind=args.kind, **kw)
+    trace = run_trace(smoke=bool(args.smoke))
 
     width = max(len(c) for c in COLUMNS) + 2
     print("row".ljust(18) + "".join(c.rjust(width) for c in COLUMNS))
@@ -623,13 +641,22 @@ def main(argv=None) -> int:
     print("replication transports/policies (slots engine, full_engine, "
           "simnet straggler link; ops/s wall + controller wait "
           f"ticks/op): {repl_cells}")
+    det = trace.get("determinism", {})
+    trace_cells = "  ".join(
+        f"{name} ok={doc['oracle_ok']}"
+        f"/p99={doc['latency']['all']['p99']:g}tk"
+        for name, doc in trace.items() if name != "determinism")
+    print("chaos harness (trace-driven load + fault schedule, byte "
+          f"oracle; per-scenario oracle verdict + pump-tick P99): "
+          f"{trace_cells}  determinism match={det.get('match')}")
 
     if args.out:
         doc = {"bench": "ladder", "kind": args.kind,
                "smoke": bool(args.smoke), "params": kw,
                "columns": list(COLUMNS), "rows": list(ROWS),
                "ops_per_s": ladder, "mixed_control": mixed,
-               "blockdev": blockdev, "replication": replication}
+               "blockdev": blockdev, "replication": replication,
+               "trace": trace}
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.out}")
@@ -638,15 +665,18 @@ def main(argv=None) -> int:
         problems = (check_no_regression(ladder)
                     + check_ring_gates(ladder, mixed)
                     + check_blockdev_gate(blockdev)
-                    + check_replication_gate(replication, ladder))
+                    + check_replication_gate(replication, ladder)
+                    + check_trace_gates(trace))
         if problems:
             print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
             return 1
         print("check OK: +fused/+sharded/+ring hold the +dbs floor on every "
               "row, +ring holds +fused on pure data and beats the fence on "
               "mixed data+control, the VolumeManager byte API holds "
-              "0.9x raw +ring on aligned spans, and the replica-transport "
-              "local/all path holds 0.9x the +dbs column on pure data")
+              "0.9x raw +ring on aligned spans, the replica-transport "
+              "local/all path holds 0.9x the +dbs column on pure data, and "
+              "the chaos harness is oracle-clean, replay-deterministic and "
+              "inside its straggler tail bounds")
     return 0
 
 

@@ -114,6 +114,14 @@ class IOFuture:
         """Max completion latency (pump ticks) across the fan-out."""
         return max((r.latency or 0 for r in self._reqs), default=0)
 
+    def completion_tick(self) -> int:
+        """Absolute pump tick the last fan-out op completed on
+        (``submission tick + latency - 1``; the frontend stamps both ends
+        on the same clock). Deterministic across replays — the harness's
+        replay-determinism gate compares per-op completion ticks."""
+        return max((r.tick + (r.latency or 1) - 1 for r in self._reqs),
+                   default=0)
+
     def result(self) -> Any:
         if self._cached is not IOFuture._UNSET:
             return self._cached

@@ -1,0 +1,42 @@
+"""Trace-driven chaos harness: deterministic load + fault schedules + gates.
+
+The paper evaluates the optimized engine under steady fio-style load; real
+SDS engines diverge from their averages in the *tail*, under failure. This
+package drives the public ``VolumeManager`` API (core/blockdev.py) with a
+seeded, replayable op stream while a chaos scheduler injects replica
+failures, quorum loss, rebuilds, link degradation and mid-trace control
+ops — every run reproducible from ``(trace_seed, chaos_seed)``:
+
+- ``traces``  — the fio-style trace generator: seq/rand mixes, read
+  fraction, burst arrivals, zipf-hot volumes and pages, aligned and
+  unaligned byte spans,
+- ``chaos``   — the chaos scheduler: trace-indexed fault/control events,
+- ``oracle``  — the shadow bytearray oracle: mirrors every acked write,
+  checks byte equivalence on every read and, at end of trace, on every
+  surviving replica,
+- ``stats``   — latency percentiles (P50/P99/P999 in pump ticks via the
+  ``Request.latency`` lane) + controller wait-tick tails + transport
+  counters,
+- ``runner``  — ``run(...)``: one harness execution; the named scenario
+  catalog (``SCENARIOS``/``run_scenario``); ``run_matrix`` +
+  ``check_trace_gates`` — the BENCH ``trace`` key and its CI gates.
+
+Tests, the benchmark ladder (``run_trace``) and the ``chaos-smoke`` CI
+step (``python -m repro.harness``) all drive the same ``run()`` entry
+point. See docs/ARCHITECTURE.md ("Chaos harness").
+"""
+from repro.harness.chaos import ChaosConfig, ChaosEvent, schedule_chaos
+from repro.harness.oracle import ByteOracle, OracleMismatch
+from repro.harness.runner import (SCENARIOS, HarnessResult, check_trace_gates,
+                                  run, run_matrix, run_scenario)
+from repro.harness.stats import percentile, summarize
+from repro.harness.traces import TraceConfig, TraceOp, generate_trace
+
+__all__ = [
+    "ChaosConfig", "ChaosEvent", "schedule_chaos",
+    "ByteOracle", "OracleMismatch",
+    "SCENARIOS", "HarnessResult", "check_trace_gates", "run", "run_matrix",
+    "run_scenario",
+    "percentile", "summarize",
+    "TraceConfig", "TraceOp", "generate_trace",
+]

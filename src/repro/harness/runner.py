@@ -1,0 +1,535 @@
+"""The harness runner: replay a trace under a chaos schedule, check bytes.
+
+``run()`` is THE entry point — tests, the benchmark ladder's ``run_trace``
+workload and the ``chaos-smoke`` CI step (``python -m repro.harness``) all
+drive it, so every consumer stresses the same engine code path: the public
+``VolumeManager`` byte API over a registered backend, transport and
+write/read policy.
+
+One run:
+
+1. generate the op stream from ``(trace_seed, TraceConfig, geometry)`` and
+   the event list from ``(chaos_seed, ChaosConfig)`` — or take both
+   pre-built (the edge-case tests hand-craft ``ChaosEvent`` lists),
+2. replay: submit each burst asynchronously, firing due chaos events
+   before the op they are pinned to; flush at burst boundaries; check
+   every read against the shadow oracle (expected bytes captured at
+   submission — the API's ordering point) and assert **no hung
+   ``IOFuture``** (every future a chaos run hands out must resolve),
+3. verify: drain the transports (write-behind stragglers land), rebuild
+   every still-failed replica, read every volume end-to-end through the
+   normal path, then — on host-dispatch replica groups — force the read
+   path onto EACH replica in turn (fail the others, read, rebuild) so a
+   stale rebuilt copy cannot hide behind a healthy peer,
+4. report: pump-tick latency percentiles, controller wait-tick tails,
+   transport counters, and a replay ``digest`` (sha1 over per-op
+   completion ticks, the verification read-back bytes and the retransmit
+   counters) — two runs with identical seeds/config MUST produce identical
+   digests, the determinism gate CI enforces.
+
+**Seed threading (replay determinism).** The harness owns the one seed
+rule: on ``transport="simnet"`` it threads ``chaos_seed`` into the
+transport's ``seed`` opt unless the caller pinned one, so the simulated
+network's drop/reorder decisions replay with the run — identical
+``(trace_seed, chaos_seed, transport_opts)`` is byte-identical end to end
+(``tests/test_harness.py::test_replay_determinism``).
+
+``SCENARIOS`` is the named catalog the ladder/CI matrix runs; adding a
+scenario = adding one entry (docs/ARCHITECTURE.md walks through it).
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.blockdev import IOFuture, Volume, VolumeManager
+from repro.harness import stats
+from repro.harness.chaos import ChaosConfig, ChaosEvent, schedule_chaos
+from repro.harness.oracle import ByteOracle, OracleMismatch
+from repro.harness.traces import (TraceConfig, TraceOp, generate_trace,
+                                  payload_bytes)
+
+# default tiny geometry: big enough for multi-page spans and CoW pressure,
+# small enough that the full-capacity per-replica verification reads stay
+# cheap on a CPU smoke box
+GEOMETRY = dict(block_bytes=16, page_blocks=4, n_pages=32, batch=16,
+                n_extents=2048, max_volumes=12, n_queues=4, n_slots=256)
+
+
+@dataclass
+class HarnessResult:
+    """Everything one run measured (module docstring, step 4)."""
+
+    n_ops: int
+    completed: int                      # engine SQE completions
+    checked_reads: int
+    oracle_failures: List[str]
+    harness_failures: List[str]         # hung futures / bad statuses
+    events_applied: List[str]
+    events_skipped: List[str]
+    completion_ticks: List[int]         # per trace op, in pump ticks
+    latency: Dict[str, Any]             # pump-tick percentiles per kind
+    wait: Dict[str, Any]                # wait-tick percentiles (1-op bursts)
+    counters: Optional[Dict[str, Any]]  # transport counters (None w/o links)
+    wall_s: float
+    digest: str
+
+    @property
+    def ok(self) -> bool:
+        return not self.oracle_failures and not self.harness_failures
+
+    def raise_if_failed(self) -> None:
+        if not self.ok:
+            raise OracleMismatch(
+                "harness run failed:\n  "
+                + "\n  ".join((self.oracle_failures
+                               + self.harness_failures)[:20]))
+
+    def to_dict(self) -> Dict[str, Any]:
+        """The BENCH-json shape (compact: tick lists become the digest)."""
+        return {
+            "n_ops": self.n_ops, "completed": self.completed,
+            "checked_reads": self.checked_reads,
+            "oracle_ok": self.ok,
+            "failures": (self.oracle_failures + self.harness_failures)[:5],
+            "events_applied": len(self.events_applied),
+            "events_skipped": len(self.events_skipped),
+            "latency": self.latency, "wait": self.wait,
+            "counters": self.counters, "wall_s": self.wall_s,
+            "ops_per_s": (self.n_ops / self.wall_s if self.wall_s else 0.0),
+            "digest": self.digest,
+        }
+
+
+def _healthy_replicas(storage) -> Optional[List[int]]:
+    """Indices of healthy replicas when the storage is a host-dispatch
+    ``ReplicaGroup`` (the plane replica-level chaos targets); None on
+    backends whose health lives elsewhere (sharded masks, no replicas)."""
+    reps = getattr(storage, "replicas", None)
+    if reps is None:
+        return None
+    return [i for i, r in enumerate(reps) if r.healthy]
+
+
+class _Run:
+    """One harness execution's mutable state (``run()`` drives it)."""
+
+    def __init__(self, mgr: VolumeManager, oracle: ByteOracle,
+                 trace_seed: int):
+        self.mgr = mgr
+        self.oracle = oracle
+        self.trace_seed = trace_seed
+        self.storage = mgr.engine.backend
+        self.vols: List[Volume] = []
+        self.clones: List[Volume] = []
+        # (op-or-None, future, expected-bytes-or-None) awaiting the flush
+        self.pending: List[Tuple[Optional[TraceOp], IOFuture,
+                                 Optional[bytes]]] = []
+        self.latency: Dict[str, List[float]] = {"read": [], "write": []}
+        self.wait: Dict[str, List[float]] = {"read": [], "write": []}
+        self.completion_ticks: List[int] = []
+        self.harness_failures: List[str] = []
+        self.applied: List[str] = []
+        self.skipped: List[str] = []
+        self._base_latency: Dict[int, int] = {}
+        self._base_drop: Dict[int, float] = {}
+
+    # -- chaos event application (guarded; a skip replays as a skip) --------
+    def _simnet_link(self, replica: int):
+        ts = getattr(self.storage, "transports", None)
+        if ts is None or not 0 <= replica < len(ts):
+            return None
+        t = ts[replica]
+        return t if hasattr(t, "latency") else None   # simnet links only
+
+    def apply_event(self, ev: ChaosEvent) -> None:
+        name = f"@{ev.index} {ev.action}"
+        ctl = self.mgr.engine.control
+        healthy = _healthy_replicas(self.storage)
+        try:
+            if ev.action in ("fail", "rebuild", "quorum_loss", "recover"):
+                if healthy is None:
+                    self.skipped.append(name + " (no replica plane)")
+                    return
+                if ev.action == "fail":
+                    if ev.replica not in healthy or len(healthy) < 2:
+                        self.skipped.append(name)
+                        return
+                    ctl("fail", replica=ev.replica)
+                elif ev.action == "rebuild":
+                    n = len(self.storage.replicas)
+                    if ev.replica in healthy or not 0 <= ev.replica < n:
+                        self.skipped.append(name)
+                        return
+                    ctl("rebuild", replica=ev.replica)
+                elif ev.action == "quorum_loss":
+                    keep = (ev.replica if ev.replica in healthy
+                            else healthy[0])
+                    for r in healthy:
+                        if r != keep:
+                            ctl("fail", replica=r)
+                else:                                   # recover
+                    n = len(self.storage.replicas)
+                    for r in range(n):
+                        if r not in healthy:
+                            ctl("rebuild", replica=r)
+            elif ev.action == "snapshot":
+                self.mgr.snapshot(self.vols[ev.vol % len(self.vols)])
+            elif ev.action == "clone":
+                src = self.vols[ev.vol % len(self.vols)]
+                child = self.mgr.clone(src)
+                if child is None:                       # volume table full
+                    self.skipped.append(name + " (table full)")
+                    return
+                self.oracle.clone(src.vid, child.vid)
+                self.clones.append(child)
+            elif ev.action == "discard":
+                v = self.vols[ev.vol % len(self.vols)]
+                fut = v.discard(ev.off, ev.nbytes)
+                self.oracle.discard(v.vid, ev.off, ev.nbytes)
+                self.pending.append((None, fut, None))
+            elif ev.action in ("straggler", "heal", "drop_on", "drop_off"):
+                link = self._simnet_link(ev.replica)
+                if link is None:
+                    self.skipped.append(name + " (no simnet link)")
+                    return
+                if ev.action == "straggler":
+                    self._base_latency.setdefault(ev.replica, link.latency)
+                    link.latency = max(int(ev.arg), 1)
+                elif ev.action == "heal":
+                    link.latency = self._base_latency.get(ev.replica,
+                                                          link.latency)
+                elif ev.action == "drop_on":
+                    self._base_drop.setdefault(ev.replica, link.drop)
+                    link.drop = float(ev.arg)
+                else:
+                    link.drop = self._base_drop.get(ev.replica, 0.0)
+            else:
+                self.skipped.append(name + " (unknown action)")
+                return
+        except (RuntimeError, ValueError, IndexError) as e:
+            # a guarded-but-still-invalid event must replay as the same
+            # deterministic skip, never abort the run
+            self.skipped.append(name + f" ({e})")
+            return
+        self.applied.append(name)
+
+    # -- burst replay -------------------------------------------------------
+    def submit(self, op: TraceOp) -> None:
+        v = self.vols[op.vol]
+        if op.kind == "write":
+            data = payload_bytes(self.trace_seed, op.index, op.nbytes)
+            fut = v.pwrite(op.off, data)
+            self.oracle.write(v.vid, op.off, data)
+            self.pending.append((op, fut, None))
+        else:
+            expected = self.oracle.expected(v.vid, op.off, op.nbytes)
+            fut = v.pread(op.off, op.nbytes)
+            self.pending.append((op, fut, expected))
+
+    def flush_burst(self, wait_before: Optional[int]) -> None:
+        self.mgr.flush()
+        wait_after = stats.wait_ticks(self.storage)
+        trace_ops = [p for p in self.pending if p[0] is not None]
+        for op, fut, expected in self.pending:
+            if not fut.done():
+                self.harness_failures.append(
+                    f"op {op.index if op else '(chaos)'}: IOFuture hung "
+                    "after a full flush")
+                continue
+            try:
+                val = fut.result()
+            except OSError as e:
+                self.harness_failures.append(
+                    f"op {op.index if op else '(chaos)'}: {e}")
+                continue
+            if expected is not None and op is not None:
+                v = self.vols[op.vol]
+                self.oracle.check(
+                    val, expected,
+                    f"op {op.index} read vol{v.vid}[{op.off}:"
+                    f"{op.off + op.nbytes}]")
+            if op is not None:
+                self.latency[op.kind].append(float(fut.latency()))
+                self.completion_ticks.append(fut.completion_tick())
+        if (wait_before is not None and wait_after is not None
+                and len(trace_ops) == 1):
+            # singleton burst: the controller wait-tick delta is THIS op's
+            # (the clock the straggler tail gates are expressed in)
+            self.wait[trace_ops[0][0].kind].append(
+                float(wait_after - wait_before))
+        self.pending.clear()
+
+    # -- end-of-trace verification ------------------------------------------
+    def verify(self) -> bytes:
+        """Final oracle sweep (module docstring, step 3). Returns the
+        concatenated read-back bytes (digest input)."""
+        mgr, oracle = self.mgr, self.oracle
+        mgr.flush()
+        if hasattr(self.storage, "drain_transports"):
+            self.storage.drain_transports()
+        ctl = mgr.engine.control
+        healthy = _healthy_replicas(self.storage)
+        if healthy is not None:
+            for r in range(len(self.storage.replicas)):
+                if r not in healthy:
+                    ctl("rebuild", replica=r)           # final rebuild
+        volumes = self.vols + self.clones
+        blob = bytearray()
+
+        def read_all(tag: str) -> None:
+            for v in volumes:
+                got = v.read(0, mgr.capacity)
+                blob.extend(got)
+                oracle.check(got, oracle.expected(v.vid, 0, mgr.capacity),
+                             f"{tag} vol{v.vid}")
+
+        read_all("end-of-trace")
+        n = len(self.storage.replicas) if healthy is not None else 0
+        if n > 1 and not mgr.engine.cfg.null_storage:
+            # force the read path onto EACH surviving replica in turn
+            for serve in range(n):
+                others = [r for r in range(n) if r != serve]
+                for r in others:
+                    ctl("fail", replica=r)
+                read_all(f"replica {serve}")
+                for r in others:
+                    ctl("rebuild", replica=r)
+        return bytes(blob)
+
+
+def run(*, trace_seed: int = 0, chaos_seed: int = 0,
+        trace: Optional[TraceConfig] = None,
+        chaos: Optional[ChaosConfig] = None,
+        trace_ops: Optional[List[TraceOp]] = None,
+        chaos_events: Optional[List[ChaosEvent]] = None,
+        backend: str = "slots", n_replicas: int = 2, n_shards: int = 1,
+        transport: str = "local", write_policy: str = "all",
+        read_policy: str = "rr",
+        transport_opts: Optional[Dict[str, Any]] = None,
+        geometry: Optional[Dict[str, int]] = None,
+        verify_replicas: bool = True, strict: bool = False) -> HarnessResult:
+    """One harness execution (module docstring). ``trace_ops`` /
+    ``chaos_events`` bypass the generators (hand-crafted tests); otherwise
+    both derive from the seeds. ``strict=True`` raises ``OracleMismatch``
+    at the end instead of returning a failed result."""
+    trace = trace or TraceConfig()
+    geo = dict(GEOMETRY)
+    geo.update(geometry or {})
+    if transport == "simnet":
+        # THE seed rule: the simulated network's drop/reorder stream is part
+        # of the replay identity — derive it from chaos_seed unless pinned
+        transport_opts = dict(transport_opts or {})
+        transport_opts.setdefault("seed", chaos_seed)
+    mgr = VolumeManager(
+        backend=backend, n_shards=n_shards, n_replicas=n_replicas,
+        payload_elems=geo["block_bytes"], page_blocks=geo["page_blocks"],
+        max_pages=geo["n_pages"], n_extents=geo["n_extents"],
+        max_volumes=geo["max_volumes"], n_queues=geo["n_queues"],
+        n_slots=geo["n_slots"], batch=geo["batch"], transport=transport,
+        write_policy=write_policy, read_policy=read_policy,
+        transport_opts=transport_opts)
+    oracle = ByteOracle(mgr.capacity)
+    st = _Run(mgr, oracle, trace_seed)
+    if trace_ops is None:
+        trace_ops = generate_trace(
+            trace_seed, trace, block_bytes=geo["block_bytes"],
+            page_blocks=geo["page_blocks"], n_pages=geo["n_pages"])
+    if chaos_events is None:
+        chaos_events = [] if chaos is None else schedule_chaos(
+            chaos_seed, chaos, n_ops=len(trace_ops) or 1,
+            n_replicas=n_replicas, n_volumes=trace.n_volumes,
+            capacity=mgr.capacity)
+    by_index: Dict[int, List[ChaosEvent]] = {}
+    for ev in chaos_events:
+        by_index.setdefault(ev.index, []).append(ev)
+    for _ in range(trace.n_volumes):
+        oracle.add_volume(mgr.create().vid)
+    st.vols = [mgr.open(vid) for vid in sorted(oracle.shadow)]
+    t0 = time.perf_counter()
+    wait_before = stats.wait_ticks(st.storage)
+    try:
+        for op in trace_ops:
+            for ev in by_index.pop(op.index, ()):
+                st.apply_event(ev)
+            st.submit(op)
+            if op.last_in_burst:
+                st.flush_burst(wait_before)
+                wait_before = stats.wait_ticks(st.storage)
+        for idx in sorted(by_index):                    # post-trace events
+            for ev in by_index[idx]:
+                st.apply_event(ev)
+        st.flush_burst(wait_before)
+        blob = st.verify() if verify_replicas else b""
+        counters = stats.transport_counters(st.storage)
+        wall = time.perf_counter() - t0
+        h = hashlib.sha1()
+        h.update(b"ticks:" + ",".join(
+            map(str, st.completion_ticks)).encode())
+        h.update(b"|bytes:" + blob)
+        if counters is not None:
+            h.update(b"|retx:" + ",".join(
+                map(str, counters["per_link_retransmits"])).encode())
+        result = HarnessResult(
+            n_ops=len(trace_ops), completed=mgr.engine.completed,
+            checked_reads=oracle.checked_reads,
+            oracle_failures=list(oracle.failures),
+            harness_failures=st.harness_failures,
+            events_applied=st.applied, events_skipped=st.skipped,
+            completion_ticks=st.completion_ticks,
+            latency=stats.latency_lanes(st.latency),
+            wait=stats.latency_lanes(st.wait),
+            counters=counters, wall_s=wall, digest=h.hexdigest())
+    finally:
+        mgr.close()
+    if strict:
+        result.raise_if_failed()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# the scenario catalog (docs/ARCHITECTURE.md "Chaos harness" documents how
+# to add one: name -> run() kwargs; run_matrix sizes n_ops per mode)
+# ---------------------------------------------------------------------------
+_CTRL_ONLY = (("fail", 0.0), ("rebuild", 0.0), ("quorum_loss", 0.0),
+              ("recover", 0.0), ("straggler", 0.0), ("heal", 0.0),
+              ("drop_on", 0.0), ("drop_off", 0.0))
+
+STRAGGLER_LATENCY = 8
+_STRAGGLER = dict(
+    backend="slots", n_replicas=3, transport="simnet",
+    write_policy="quorum",
+    trace=TraceConfig(n_ops=160, n_volumes=4, read_frac=0.75, seq_frac=0.3,
+                      unaligned_frac=0.0, mean_burst=1),
+    transport_opts=dict(latency=[1, 1, STRAGGLER_LATENCY], window=64),
+    chaos=None)
+
+SCENARIOS: Dict[str, Dict[str, Any]] = {
+    # clean replay on the default transport: the oracle must hold with no
+    # faults at all before chaos results mean anything
+    "steady/local": dict(
+        backend="slots", n_replicas=2, transport="local",
+        trace=TraceConfig(n_ops=200, n_volumes=4, read_frac=0.4,
+                          unaligned_frac=0.15),
+        chaos=None),
+    # the adversarial core: quorum writes over a lossy simulated network
+    # with replica fails, quorum loss, rebuilds, link degradation and
+    # mid-trace control ops
+    "chaos/simnet": dict(
+        backend="slots", n_replicas=3, transport="simnet",
+        write_policy="quorum",
+        trace=TraceConfig(n_ops=200, n_volumes=4, read_frac=0.4,
+                          unaligned_frac=0.1),
+        chaos=ChaosConfig(n_events=10),
+        transport_opts=dict(latency=2, window=16, drop=0.05)),
+    # write-behind: acked-at-post writes racing fails/rebuilds
+    "chaos/async": dict(
+        backend="slots", n_replicas=3, transport="simnet",
+        write_policy="async",
+        trace=TraceConfig(n_ops=160, n_volumes=4, read_frac=0.3),
+        chaos=ChaosConfig(n_events=8),
+        transport_opts=dict(latency=2, window=16)),
+    # the in-program plane: snapshot/clone/discard chaos riding the ring's
+    # in-band control path (replica chaos is host-dispatch-only)
+    "control/ring": dict(
+        backend="ring", n_shards=2, n_replicas=2,
+        trace=TraceConfig(n_ops=160, n_volumes=4, read_frac=0.4,
+                          unaligned_frac=0.1),
+        chaos=ChaosConfig(n_events=8, weights=_CTRL_ONLY),
+        verify_replicas=True),
+    # the tail-latency pair: one straggler link, singleton bursts (per-op
+    # wait ticks), rr vs latency-weighted reads — the P99/P999 gates
+    "straggler/rr": dict(read_policy="rr", **_STRAGGLER),
+    "straggler/latency": dict(read_policy="latency", **_STRAGGLER),
+}
+
+# the replay-determinism gate re-runs this scenario and compares digests
+DETERMINISM_SCENARIO = "chaos/simnet"
+
+
+def run_scenario(name: str, *, trace_seed: int = 0, chaos_seed: int = 0,
+                 n_ops: Optional[int] = None, **overrides) -> HarnessResult:
+    """Run one catalog scenario; ``n_ops`` rescales its trace (smoke)."""
+    kw = dict(SCENARIOS[name])
+    kw.update(overrides)
+    if n_ops is not None:
+        from dataclasses import replace
+        kw["trace"] = replace(kw["trace"], n_ops=n_ops)
+    return run(trace_seed=trace_seed, chaos_seed=chaos_seed, **kw)
+
+
+def run_matrix(*, smoke: bool = True, trace_seed: int = 0,
+               chaos_seed: int = 0,
+               scenarios: Optional[List[str]] = None) -> Dict[str, Any]:
+    """Run the scenario matrix + the determinism replay — the BENCH
+    ``trace`` key (``check_trace_gates`` gates it)."""
+    names = scenarios or list(SCENARIOS)
+    n_ops = 120 if smoke else None
+    out: Dict[str, Any] = {}
+    results: Dict[str, HarnessResult] = {}
+    for name in names:
+        res = run_scenario(name, trace_seed=trace_seed,
+                           chaos_seed=chaos_seed, n_ops=n_ops)
+        results[name] = res
+        out[name] = res.to_dict()
+    if DETERMINISM_SCENARIO in results:
+        first = results[DETERMINISM_SCENARIO]
+        again = run_scenario(DETERMINISM_SCENARIO, trace_seed=trace_seed,
+                             chaos_seed=chaos_seed, n_ops=n_ops)
+        out["determinism"] = {
+            "scenario": DETERMINISM_SCENARIO,
+            "digest_a": first.digest, "digest_b": again.digest,
+            "ticks_match": first.completion_ticks == again.completion_ticks,
+            "match": (first.digest == again.digest
+                      and first.completion_ticks == again.completion_ticks),
+        }
+    return out
+
+
+# straggler-scenario tail bounds, in controller wait ticks: the latency-
+# weighted policy must keep P99 under half the straggler's link latency
+# (it reads the fast links, ~1-2 ticks) and P999 inside 2x the straggler
+# (a bounded worst case even while the ewma is still learning)
+P99_BOUND = STRAGGLER_LATENCY / 2
+P999_BOUND = 2 * STRAGGLER_LATENCY
+
+
+def check_trace_gates(trace: Dict[str, Any]) -> List[str]:
+    """The harness CI gates (ISSUE 6 acceptance): every scenario's oracle
+    clean, the determinism replay digest-identical, and the straggler
+    tail bounded — latency-weighted reads beat rr at P99 and stay under
+    ``P99_BOUND``/``P999_BOUND`` wait ticks."""
+    problems = []
+    for name, doc in trace.items():
+        if name == "determinism":
+            continue
+        if not doc.get("oracle_ok", False):
+            problems.append(
+                f"trace {name}: oracle violations {doc.get('failures')}")
+    det = trace.get("determinism")
+    if det is not None and not det["match"]:
+        problems.append(
+            f"trace determinism: {det['scenario']} replayed to a different "
+            f"digest ({det['digest_a'][:12]} vs {det['digest_b'][:12]}, "
+            f"ticks_match={det['ticks_match']})")
+    rr = trace.get("straggler/rr")
+    lat = trace.get("straggler/latency")
+    if rr is not None and lat is not None:
+        rr_p99 = rr["wait"]["read"]["p99"]
+        lat_p99 = lat["wait"]["read"]["p99"]
+        lat_p999 = lat["wait"]["read"]["p999"]
+        if lat_p99 >= rr_p99:
+            problems.append(
+                f"trace straggler: latency-weighted read P99 ({lat_p99:g} "
+                f"wait ticks) does not beat rr ({rr_p99:g})")
+        if lat_p99 > P99_BOUND:
+            problems.append(
+                f"trace straggler: latency-weighted read P99 {lat_p99:g} "
+                f"wait ticks > bound {P99_BOUND:g}")
+        if lat_p999 > P999_BOUND:
+            problems.append(
+                f"trace straggler: latency-weighted read P999 {lat_p999:g} "
+                f"wait ticks > bound {P999_BOUND:g}")
+    return problems
