@@ -18,9 +18,49 @@ def _t(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _dbs_rows(key):
+    """One write + one read row per REGISTERED DBS kernel, with nominal
+    achieved bytes/s (kernels/dbs ``dbs_write_bytes``/``dbs_read_bytes`` —
+    implementation-independent, so the ratios compare across kernels)."""
+    from repro.core import dbs
+    from repro.kernels.dbs import (dbs_read_bytes, dbs_write_bytes,
+                                   make_kernel)
+    from repro.kernels.dbs.registry import available_kernels
+    e, page, d, b = 257, 8, 64, 32          # +1 reserved scratch row
+    ks = jax.random.split(key, 3)
+    pool = jax.random.normal(ks[0], (e, page, d))
+    payload = jax.random.normal(ks[1], (b, d))
+    blocks = (jnp.arange(b, dtype=jnp.int32) * 3) % page
+    dst = (jnp.arange(b, dtype=jnp.int32) * 5) % (e - 1)
+    cow_src = jnp.where(jnp.arange(b) % 4 == 0,
+                        (dst + 97) % (e - 1), -1).astype(jnp.int32)
+    ok = jnp.arange(b) % 8 != 7
+    ext = jnp.where(jnp.arange(b) % 5 == 0, -1, dst).astype(jnp.int32)
+    itemsize = pool.dtype.itemsize
+    wbytes = dbs_write_bytes(int(ok.sum()), int(((cow_src >= 0) & ok).sum()),
+                             page, d, itemsize)
+    rbytes = dbs_read_bytes(b, d, itemsize)
+    rows = []
+    for name in available_kernels():
+        kern = make_kernel(name)
+        wf = jax.jit(lambda p, pay, dd, cc, oo, bl, k=kern: k.write(
+            p, dbs.WriteOps(dst=dd, cow_src=cc, ok=oo), pay, bl))
+        rf = jax.jit(lambda p, ee, bl, k=kern: k.read(p, ee, bl))
+        w_us = _t(wf, pool, payload, dst, cow_src, ok, blocks)
+        r_us = _t(rf, pool, ext, blocks)
+        rows.append({"bench": "kernel_dbs", "column": name, "layer": "B32",
+                     "kind": "write", "us_per_call": w_us,
+                     "bytes_per_s": wbytes / (w_us * 1e-6)})
+        rows.append({"bench": "kernel_dbs", "column": name, "layer": "B32",
+                     "kind": "read", "us_per_call": r_us,
+                     "bytes_per_s": rbytes / (r_us * 1e-6)})
+    return rows
+
+
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
+    rows.extend(_dbs_rows(key))
     from repro.kernels.flash_attention.ops import flash_attention_reference
     q = jax.random.normal(key, (1, 512, 8, 64))
     k = jax.random.normal(key, (1, 512, 2, 64))
@@ -43,8 +83,9 @@ def run():
 
 def main():
     for r in run():
+        bps = f"{r['bytes_per_s']:.3g}" if "bytes_per_s" in r else "-"
         print(f"{r['bench']},{r['column']},{r['layer']},{r['kind']},"
-              f"{r['us_per_call']:.1f},-")
+              f"{r['us_per_call']:.1f},{bps}")
 
 
 if __name__ == "__main__":

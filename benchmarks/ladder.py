@@ -55,6 +55,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -69,13 +70,13 @@ ROWS = ("frontend_only", "without_storage", "full_engine")
 def make_engine(column: str, row: str, *, payload_shape=(64,),
                 n_replicas: int = 2, page_blocks: int = 32,
                 n_extents: int = 4096, max_pages: int = 1024,
-                n_shards: int = 4):
+                n_shards: int = 4, kernel: str = "auto"):
     null_backend = row == "frontend_only"
     null_storage = row == "without_storage"
     kw = dict(payload_shape=payload_shape, n_replicas=n_replicas,
               page_blocks=page_blocks, n_extents=n_extents,
               max_pages=max_pages, null_backend=null_backend,
-              null_storage=null_storage)
+              null_storage=null_storage, kernel=kernel)
     if column == "upstream":
         return UpstreamEngine(EngineConfig(**kw))
     if column == "+frontend":
@@ -465,6 +466,111 @@ def check_trace_gates(trace: Dict[str, Any]) -> List[str]:
     return _gates(trace)
 
 
+def run_kernels(*, repeats: int = 3, **_ignored) -> Dict[str, Any]:
+    """The per-DBS-kernel micro benchmark (ISSUE 7): for every REGISTERED
+    kernel (kernels/dbs registry), wall time + nominal achieved bytes/s for
+    the write and read data planes of one engine-shaped batch (CoW lanes,
+    a duplicate-dst write group, failed lanes, read holes), a bit-identity
+    check against the ``xla`` reference, and — on compiled backends only —
+    the ``+fused`` full_engine row rerun with ``kernel="pallas"`` vs
+    ``kernel="xla"`` (the perf half of ``check_kernel_gate``;
+    interpret-mode Pallas wall times measure the interpreter, not the
+    kernel, so that ratio is only taken where the kernel compiles).
+    Lands in BENCH json under ``kernels``; ``benchmarks/roofline.py``
+    renders achieved-vs-peak bytes/s from it."""
+    from repro.core import dbs
+    from repro.kernels.dbs import (dbs_read_bytes, dbs_write_bytes,
+                                   make_kernel)
+    from repro.kernels.dbs.registry import available_kernels
+    from repro.utils.machine import machine_profile
+
+    prof = machine_profile()
+    e, page, d, b = 129, 8, 32, 32          # +1 reserved scratch row
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    pool = jax.random.normal(ks[0], (e, page, d))
+    payload = jax.random.normal(ks[1], (b, d))
+    lane = jnp.arange(b, dtype=jnp.int32)
+    blocks = (lane * 3) % page
+    # duplicate-dst groups: lane 8k+5 joins lane 8k+4's extent (the leader,
+    # which also CoWs — cow_src sits on the group's first live lane, the
+    # write_pages convention the kernels' routing assumes)
+    dst = jnp.where(lane % 8 == 5, lane - 1, lane) * 3 % (e - 1)
+    cow_src = jnp.where(lane % 8 == 4, (dst + 61) % (e - 1), -1)
+    cow_src = cow_src.astype(jnp.int32)
+    ok = lane % 11 != 10
+    ext = jnp.where(lane % 5 == 0, -1, dst).astype(jnp.int32)  # read holes
+    itemsize = pool.dtype.itemsize
+    wbytes = dbs_write_bytes(int(ok.sum()),
+                             int(((cow_src >= 0) & ok).sum()),
+                             page, d, itemsize)
+    rbytes = dbs_read_bytes(b, d, itemsize)
+
+    def _time(fn, *args):
+        fn(*args).block_until_ready()       # compile outside the clock
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fn(*args).block_until_ready()
+        return (time.perf_counter() - t0) / repeats * 1e6
+
+    xla = make_kernel("xla")
+    ref_w = xla.write(pool, dbs.WriteOps(dst=dst, cow_src=cow_src, ok=ok),
+                      payload, blocks)
+    ref_r = xla.read(pool, ext, blocks)
+    out: Dict[str, Any] = {"profile": prof.to_dict()}
+    for name in available_kernels():
+        kern = make_kernel(name)
+        wf = jax.jit(lambda p, pay, dd, cc, oo, bl, k=kern: k.write(
+            p, dbs.WriteOps(dst=dd, cow_src=cc, ok=oo), pay, bl))
+        rf = jax.jit(lambda p, ee, bl, k=kern: k.read(p, ee, bl))
+        got_w = wf(pool, payload, dst, cow_src, ok, blocks)
+        got_r = rf(pool, ext, blocks)
+        identical = bool(
+            np.array_equal(np.asarray(got_w[:e - 1]),      # excl. dump row
+                           np.asarray(ref_w[:e - 1]))
+            and np.array_equal(np.asarray(got_r), np.asarray(ref_r)))
+        w_us = _time(wf, pool, payload, dst, cow_src, ok, blocks)
+        r_us = _time(rf, pool, ext, blocks)
+        out[name] = {
+            "write_us": w_us, "read_us": r_us,
+            "write_bytes_per_s": wbytes / (w_us * 1e-6),
+            "read_bytes_per_s": rbytes / (r_us * 1e-6),
+            "write_vs_peak": wbytes / (w_us * 1e-6) / prof.hbm_bw,
+            "read_vs_peak": rbytes / (r_us * 1e-6) / prof.hbm_bw,
+            "identical": identical,
+        }
+    if jax.default_backend() == "tpu":      # the compiled-only perf ratio
+        pay = jnp.ones((16,), jnp.float32)
+        for kname in ("pallas", "xla"):
+            eng = make_engine("+fused", "full_engine", payload_shape=(16,),
+                              max_pages=128, n_extents=512, kernel=kname)
+            out[f"fused_{kname}_ops_s"] = measure_engine(
+                eng, n_requests=512, kind="mixed", pages=64, n_volumes=4,
+                payload=pay)
+    return out
+
+
+def check_kernel_gate(kernels: Dict[str, Any],
+                      floor: float = 0.9) -> List[str]:
+    """The all-Pallas-hot-path gate (ISSUE 7 acceptance): every registered
+    DBS kernel must be bit-identical to the ``xla`` reference on the
+    crafted engine batch, and on compiled backends the ``+fused`` row with
+    ``kernel="pallas"`` must hold >= ``floor``x the ``kernel="xla"`` run —
+    kernel ownership buys lowering quality, not overhead."""
+    problems = []
+    for name, row in kernels.items():
+        if isinstance(row, dict) and "identical" in row \
+                and not row["identical"]:
+            problems.append(
+                f"kernel {name}: NOT bit-identical to the xla reference")
+    if "fused_pallas_ops_s" in kernels:
+        p, x = kernels["fused_pallas_ops_s"], kernels["fused_xla_ops_s"]
+        if p < x * floor:
+            problems.append(
+                f"kernel pallas: +fused {p:.0f} ops/s < {floor:g}x "
+                f"xla ({x:.0f} ops/s)")
+    return problems
+
+
 def check_replication_gate(repl: Dict[str, Dict[str, float]],
                            ladder: Dict[str, Dict[str, float]],
                            floor: float = 0.9) -> List[str]:
@@ -621,6 +727,7 @@ def main(argv=None) -> int:
     blockdev = run_blockdev(**kw)
     replication = run_replication(kind=args.kind, **kw)
     trace = run_trace(smoke=bool(args.smoke))
+    kernels = run_kernels(**kw)
 
     width = max(len(c) for c in COLUMNS) + 2
     print("row".ljust(18) + "".join(c.rjust(width) for c in COLUMNS))
@@ -649,6 +756,14 @@ def main(argv=None) -> int:
     print("chaos harness (trace-driven load + fault schedule, byte "
           f"oracle; per-scenario oracle verdict + pump-tick P99): "
           f"{trace_cells}  determinism match={det.get('match')}")
+    kern_cells = "  ".join(
+        f"{name} w={row['write_bytes_per_s']:.3g}B/s "
+        f"r={row['read_bytes_per_s']:.3g}B/s ok={row['identical']}"
+        for name, row in kernels.items()
+        if isinstance(row, dict) and "write_us" in row)
+    print("dbs kernels (registry; nominal achieved bytes/s + bit-identity "
+          f"vs the xla reference; profile {kernels['profile']['name']}): "
+          f"{kern_cells}")
 
     if args.out:
         doc = {"bench": "ladder", "kind": args.kind,
@@ -656,7 +771,7 @@ def main(argv=None) -> int:
                "columns": list(COLUMNS), "rows": list(ROWS),
                "ops_per_s": ladder, "mixed_control": mixed,
                "blockdev": blockdev, "replication": replication,
-               "trace": trace}
+               "trace": trace, "kernels": kernels}
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"wrote {args.out}")
@@ -666,7 +781,8 @@ def main(argv=None) -> int:
                     + check_ring_gates(ladder, mixed)
                     + check_blockdev_gate(blockdev)
                     + check_replication_gate(replication, ladder)
-                    + check_trace_gates(trace))
+                    + check_trace_gates(trace)
+                    + check_kernel_gate(kernels))
         if problems:
             print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
             return 1
@@ -676,7 +792,8 @@ def main(argv=None) -> int:
               "0.9x raw +ring on aligned spans, the replica-transport "
               "local/all path holds 0.9x the +dbs column on pure data, and "
               "the chaos harness is oracle-clean, replay-deterministic and "
-              "inside its straggler tail bounds")
+              "inside its straggler tail bounds, and every registered DBS "
+              "kernel is bit-identical to the xla reference")
     return 0
 
 

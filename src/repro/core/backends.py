@@ -148,6 +148,8 @@ class _FrontendBackendBase(ControlDispatch):
                 transport_opts=cfg.transport_opts)
         self._cow = (cfg.cow if cfg.cow != "auto" else
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
+        from repro.kernels.dbs.registry import resolve_kernel_name
+        self._kernel = resolve_kernel_name(cfg)
         self.completed = 0
 
     def create_volume(self) -> int:
@@ -338,7 +340,7 @@ class FusedBackend(_FrontendBackendBase):
             table, states, pools, page_revs, ok, reads = fused_step(
                 self.frontend.table, states, pools, page_revs, batch, rr,
                 null_backend=self.cfg.null_backend,
-                null_storage=self.cfg.null_storage, cow=self._cow)
+                null_storage=self.cfg.null_storage, kernel=self._kernel)
             if self.storage is not None:
                 self.storage.set_device_state(states, pools)
                 self.storage.set_device_page_revs(page_revs)
@@ -348,7 +350,7 @@ class FusedBackend(_FrontendBackendBase):
             table, ok, reads = fused_step_read(
                 self.frontend.table, states, pools, batch, rr,
                 null_backend=self.cfg.null_backend,
-                null_storage=self.cfg.null_storage)
+                null_storage=self.cfg.null_storage, kernel=self._kernel)
         self.frontend.table = table
         # the single host hop: completion flags + completed read payloads
         ok_host, reads_host = jax.device_get((ok, reads))

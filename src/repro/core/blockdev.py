@@ -218,8 +218,8 @@ class VolumeManager:
                  n_queues: int = 4, n_slots: int = 256, batch: int = 64,
                  storage: str = "dbs", null_backend: bool = False,
                  null_storage: bool = False, cow: str = "auto",
-                 transport: str = "local", write_policy: str = "all",
-                 read_policy: str = "rr",
+                 kernel: str = "auto", transport: str = "local",
+                 write_policy: str = "all", read_policy: str = "rr",
                  transport_opts: Optional[Dict[str, Any]] = None):
         self.engine = Engine(EngineConfig(
             comm=backend, n_shards=n_shards, n_replicas=n_replicas,
@@ -227,7 +227,8 @@ class VolumeManager:
             n_extents=n_extents, max_volumes=max_volumes,
             max_pages=max_pages, n_queues=n_queues, n_slots=n_slots,
             batch=batch, storage=storage, null_backend=null_backend,
-            null_storage=null_storage, cow=cow, transport=transport,
+            null_storage=null_storage, cow=cow, kernel=kernel,
+            transport=transport,
             write_policy=write_policy, read_policy=read_policy,
             transport_opts=transport_opts))
         self._closed = False

@@ -51,10 +51,17 @@ class EngineConfig:
                                  # | ring (opcode-tagged SQ/CQ, core/ring.py)
                                  # | upstream (TGT-style baseline)
                                  # | host (sequential host-state oracle)
-    cow: str = "auto"            # CoW data plane for comm="fused"/"sharded":
-                                 # auto (pallas on TPU, ref elsewhere)
-                                 # | pallas (force the dbs_copy kernel)
-                                 # | ref (apply_write_ops gather/scatter)
+    cow: str = "auto"            # LEGACY data-plane axis (pre-registry):
+                                 # auto | pallas | ref — only consulted
+                                 # when kernel="auto" (see below)
+    kernel: str = "auto"         # DBS data plane for comm="fused"/"sharded"/
+                                 # "ring" (a REGISTERED KERNEL, kernels/dbs
+                                 # registry): auto (follow cow: pallas on
+                                 # TPU, xla elsewhere) | pallas (dbs_rw
+                                 # scatter/gather kernels) | xla
+                                 # (apply_write_ops reference) | ref
+                                 # (pure-jnp row composition) | copy
+                                 # (dbs_copy + XLA scatter hybrid)
     n_shards: int = 1            # engine shards for comm="sharded"/"ring"
     transport: str = "local"     # controller<->replica wire (a REGISTERED
                                  # TRANSPORT, core/transport.py): local
@@ -89,6 +96,11 @@ class Engine:
         if cfg.cow not in ("auto", "pallas", "ref"):
             raise ValueError(f"unknown cow impl {cfg.cow!r} "
                              "(expected auto | pallas | ref)")
+        from repro.kernels.dbs.registry import available_kernels
+        if cfg.kernel != "auto" and cfg.kernel not in available_kernels():
+            raise ValueError(
+                f"unknown kernel {cfg.kernel!r} (expected auto | "
+                f"{' | '.join(available_kernels())})")
         from repro.core.backends import make_backend
         self._impl = make_backend(cfg.comm, cfg)
         self.pool = (self._impl if getattr(self._impl, "is_pool", False)
@@ -96,6 +108,7 @@ class Engine:
         self.frontend = self._impl.frontend
         self.backend = self._impl.storage
         self._cow = getattr(self._impl, "_cow", None)
+        self._kernel = getattr(self._impl, "_kernel", None)
 
     @property
     def impl(self):

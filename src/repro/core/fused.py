@@ -11,9 +11,10 @@ jitted programs for control-plane resolution, CoW data movement, and reads.
 program per batch geometry performs
 
     slot admission  ->  write_pages control-plane resolution (per replica)
-                    ->  CoW extent copies (Pallas ``dbs_copy`` kernel)
-                    ->  payload stores, mirrored across all replicas
-                    ->  round-robin read gathers
+                    ->  CoW copies + payload stores, mirrored across all
+                        replicas (a REGISTERED KERNEL, kernels/dbs: the
+                        ``dbs_rw`` Pallas scatter, or the XLA reference)
+                    ->  round-robin read gathers (the same kernel's read)
                     ->  slot retirement
 
 with no intermediate ``device_get``. The host's only jobs are moving raw
@@ -44,7 +45,7 @@ import jax.numpy as jnp
 
 from repro.core import dbs, slots
 from repro.core.transport import stamp_page_rev
-from repro.kernels.dbs_copy.ops import dbs_copy_pool
+from repro.kernels.dbs.registry import make_kernel
 
 
 @jax.tree_util.register_dataclass
@@ -66,31 +67,24 @@ class FusedBatch:
     step: jnp.ndarray       # ()   int32 admission step (fairness/arrival)
 
 
-def _cow_apply(pool, ops: dbs.WriteOps, payload, block_offsets, cow: str):
-    """Data plane of a mirrored write batch: CoW extent copies then payload
-    block stores. ``cow="pallas"`` routes the extent copies through the
-    ``dbs_copy`` kernel (interpret-mode off-TPU); ``cow="ref"`` keeps the
-    gather/scatter ``apply_write_ops`` oracle as the reference path."""
-    if cow == "ref":
-        return dbs.apply_write_ops(pool, ops, payload, block_offsets)
-    # write_pages guarantees cow_src>=0 implies ok, but gate on ok anyway so
-    # a hostile ops batch can never route a copy through a clamped dst.
-    # scratch=True: ReplicaGroup pools carry one extra extent row past the
-    # allocator's range as the masked-lane dump, so the kernel stays aliased
-    # (no concat/slice copies of the pool).
-    pool = dbs_copy_pool(pool, ops.cow_src, ops.dst,
-                         (ops.cow_src >= 0) & ops.ok, scratch=True)
-    # payload store (identical to apply_write_ops' second half): not-ok
-    # lanes scatter out of bounds and are dropped — see the write_pages note
-    drop_dst = jnp.where(ops.ok, jnp.maximum(ops.dst, 0), pool.shape[0])
-    return pool.at[drop_dst, block_offsets].set(payload, mode="drop")
+def _cow_apply(pool, ops: dbs.WriteOps, payload, block_offsets, kernel: str):
+    """Data plane of a mirrored write batch — CoW extent copies + payload
+    block stores — dispatched through the KERNEL REGISTRY (kernels/dbs):
+    ``kernel`` names a registered ``DBSKernel`` (``pallas`` — the dbs_rw
+    write kernel owns the whole plane; ``xla`` — apply_write_ops, the old
+    ``cow="ref"`` path; ``ref`` — pure-jnp row composition; ``copy`` — the
+    PR-3 dbs_copy + XLA-scatter hybrid). All entries assume the engine pool
+    convention: ReplicaGroup pools carry one extra extent row past the
+    allocator's range as the masked-lane dump, so the Pallas paths stay
+    fully input/output-aliased (no concat/slice copies of the pool)."""
+    return make_kernel(kernel).write(pool, ops, payload, block_offsets)
 
 
 def step_core(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
               pools: Tuple[jnp.ndarray, ...],
               page_revs: Tuple[jnp.ndarray, ...], batch: FusedBatch,
               rr: jnp.ndarray, healthy=None, *, null_backend: bool = False,
-              null_storage: bool = False, cow: str = "pallas"):
+              null_storage: bool = False, kernel: str = "pallas"):
     """The fused controller iteration, un-jitted (vmap-safe over shards).
 
     ``healthy``: None for the single-engine path (the caller passes only
@@ -119,25 +113,25 @@ def step_core(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
         st, wops = dbs.write_pages(st, batch.volume, batch.page, bits, m)
         if not null_storage:
             out_pools.append(_cow_apply(pools[i], wops, batch.payload,
-                                        batch.block, cow))
+                                        batch.block, kernel))
             out_prs.append(stamp_page_rev(page_revs[i], batch.volume,
                                           batch.page, wops.ok, st.revision))
         out_states.append(st)
 
     if not null_storage:
         reads = _rr_gather(out_states, out_pools, batch, rr,
-                           ok & ~batch.is_write, reads, healthy)
+                           ok & ~batch.is_write, reads, healthy, kernel)
     return (table, tuple(out_states), tuple(out_pools), tuple(out_prs), ok,
             reads)
 
 
-@partial(jax.jit, static_argnames=("null_backend", "null_storage", "cow"),
+@partial(jax.jit, static_argnames=("null_backend", "null_storage", "kernel"),
          donate_argnums=(0, 1, 2, 3))
 def fused_step(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
                pools: Tuple[jnp.ndarray, ...],
                page_revs: Tuple[jnp.ndarray, ...], batch: FusedBatch,
                rr: jnp.ndarray, *, null_backend: bool = False,
-               null_storage: bool = False, cow: str = "pallas"):
+               null_storage: bool = False, kernel: str = "pallas"):
     """One whole controller iteration as a single compiled program.
 
     states/pools/page_revs: one entry per healthy replica (writes are
@@ -157,10 +151,11 @@ def fused_step(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
     """
     return step_core(table, states, pools, page_revs, batch, rr,
                      null_backend=null_backend, null_storage=null_storage,
-                     cow=cow)
+                     kernel=kernel)
 
 
-def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None):
+def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None,
+               kernel: str = "xla"):
     """Round-robin read: resolve + gather from replica ``rr % R``.
 
     ``healthy=None``: all replicas serve; ``lax.switch`` executes exactly one
@@ -170,21 +165,19 @@ def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None):
     is gathered and the selection is a ``where`` chain, which is what makes
     this form vmap-safe (and is no extra cost under vmap, where a batched
     switch would execute all branches anyway).
-    """
-    def _hole_masked(ext, got):
-        # holes (ext < 0: never-written or unmapped pages) read as ZEROS —
-        # without the mask the clamped gather would leak extent 0's payload
-        # (sparse-file semantics; core/blockdev.py relies on this for
-        # byte-level equivalence with a zero-filled device)
-        m = (ext >= 0).reshape(ext.shape + (1,) * (got.ndim - ext.ndim))
-        return jnp.where(m, got, 0)
 
+    The gather itself is the registry ``kernel``'s ``read``: holes
+    (ext < 0: never-written or unmapped pages) read as ZEROS — without the
+    mask a clamped gather would leak extent 0's payload (sparse-file
+    semantics; core/blockdev.py relies on this for byte-level equivalence
+    with a zero-filled device).
+    """
+    kern = make_kernel(kernel)
     if healthy is None:
         def _read_from(i):
             def branch(_):
                 ext = dbs.read_resolve(states[i], batch.volume, batch.page)
-                return _hole_masked(ext, pools[i][jnp.maximum(ext, 0),
-                                                  batch.block])
+                return kern.read(pools[i], ext, batch.block)
             return branch
         vals = jax.lax.switch(rr % len(states),
                               [_read_from(i) for i in range(len(states))], 0)
@@ -195,9 +188,8 @@ def _rr_gather(states, pools, batch, rr, rmask, reads, healthy=None):
         vals = jnp.zeros_like(reads)
         for i in range(len(states)):
             ext = dbs.read_resolve(states[i], batch.volume, batch.page)
-            vals = jnp.where(sel[i],
-                             _hole_masked(ext, pools[i][jnp.maximum(ext, 0),
-                                                        batch.block]), vals)
+            vals = jnp.where(sel[i], kern.read(pools[i], ext, batch.block),
+                             vals)
     return jnp.where(rmask.reshape(rmask.shape + (1,) * (vals.ndim - 1)),
                      vals, reads)
 
@@ -206,7 +198,8 @@ def step_core_read(table: slots.SlotTable,
                    states: Tuple[dbs.DBSState, ...],
                    pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
                    rr: jnp.ndarray, healthy=None, *,
-                   null_backend: bool = False, null_storage: bool = False):
+                   null_backend: bool = False, null_storage: bool = False,
+                   kernel: str = "xla"):
     """``step_core`` specialised to batches with no write lanes (un-jitted,
     vmap-safe; replica state and pools are inputs only)."""
     table, ids, ok = slots.transact(table, batch.want, batch.volume,
@@ -215,15 +208,16 @@ def step_core_read(table: slots.SlotTable,
     if null_backend or null_storage or not states:
         return table, ok, reads
     return table, ok, _rr_gather(states, pools, batch, rr,
-                                 ok & ~batch.is_write, reads, healthy)
+                                 ok & ~batch.is_write, reads, healthy,
+                                 kernel)
 
 
-@partial(jax.jit, static_argnames=("null_backend", "null_storage"),
+@partial(jax.jit, static_argnames=("null_backend", "null_storage", "kernel"),
          donate_argnums=(0,))
 def fused_step_read(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
                     pools: Tuple[jnp.ndarray, ...], batch: FusedBatch,
                     rr: jnp.ndarray, *, null_backend: bool = False,
-                    null_storage: bool = False):
+                    null_storage: bool = False, kernel: str = "xla"):
     """``fused_step`` specialised to batches with no write lanes.
 
     Replica state and pools are read-only here, so they are inputs only
@@ -235,4 +229,4 @@ def fused_step_read(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
     """
     return step_core_read(table, states, pools, batch, rr,
                           null_backend=null_backend,
-                          null_storage=null_storage)
+                          null_storage=null_storage, kernel=kernel)

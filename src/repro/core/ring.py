@@ -301,7 +301,7 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
                    page_revs: Tuple[jnp.ndarray, ...], batch: SQE,
                    rr: jnp.ndarray, healthy: jnp.ndarray, *,
                    classes: Tuple[str, ...], null_backend: bool = False,
-                   null_storage: bool = False, cow: str = "pallas"):
+                   null_storage: bool = False, kernel: str = "pallas"):
     """One ring iteration, un-jitted (vmap-safe over a leading shard axis).
 
     ``classes`` (static) names the opcode classes present in this batch
@@ -332,7 +332,7 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
                 if not null_storage:
                     out_pools.append(_cow_apply(pools[i], wops,
                                                 batch.payload, batch.block,
-                                                cow))
+                                                kernel))
                     out_prs.append(stamp_page_rev(
                         page_revs[i], batch.volume, batch.page, wops.ok,
                         st.revision))
@@ -343,7 +343,8 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
                 page_revs = tuple(out_prs)
         if "read" in classes and not null_storage:
             reads = _rr_gather(states, pools, batch, rr,
-                               ok & (batch.op == OP_READ), reads, healthy)
+                               ok & (batch.op == OP_READ), reads, healthy,
+                               kernel)
         if "vol" in classes:                     # lane-ordered control tail
             states, page_revs, value, status = _apply_vol_ops(
                 states, page_revs, batch, ok, value, status)
@@ -583,6 +584,8 @@ class RingEngine(ControlDispatch):
         self.cq = make_sharded_cq(s, cfg.n_slots, cfg.payload_shape)
         self._cow = (cfg.cow if cfg.cow != "auto" else
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
+        from repro.kernels.dbs.registry import resolve_kernel_name
+        self._kernel = resolve_kernel_name(cfg)
         self._vol_rr = 0
         self._ctl_seq = 1 << 30      # control-op request ids (own queue slot)
         self.completed = 0
@@ -615,7 +618,8 @@ class RingEngine(ControlDispatch):
         read_only = key == ("read",)
         core = partial(ring_step_core, classes=key,
                        null_backend=self.cfg.null_backend,
-                       null_storage=self.cfg.null_storage, cow=self._cow)
+                       null_storage=self.cfg.null_storage,
+                       kernel=self._kernel)
         mapped = vmap_shards(core, self.n_shards)
 
         if read_only:

@@ -97,6 +97,8 @@ class EnginePool(ControlDispatch):
                 transport_opts=cfg.transport_opts)
         self._cow = (cfg.cow if cfg.cow != "auto" else
                      ("pallas" if jax.default_backend() == "tpu" else "ref"))
+        from repro.kernels.dbs.registry import resolve_kernel_name
+        self._kernel = resolve_kernel_name(cfg)
         self._vol_rr = 0
         self.completed = 0
         self.dispatches = 0
@@ -119,7 +121,8 @@ class EnginePool(ControlDispatch):
         # same program, unmapped at S=1: vmap only buys the worse batched-
         # scatter lowering there (ring.vmap_shards, shared with RingEngine)
         if read_only:
-            mapped = vmap_shards(partial(step_core_read, **kw),
+            mapped = vmap_shards(partial(step_core_read,
+                                         kernel=self._kernel, **kw),
                                  self.n_shards)
 
             def stepped(table, states, pools, batch, rr, healthy):
@@ -127,7 +130,7 @@ class EnginePool(ControlDispatch):
                 return mapped(table, states, pools, batch, rr, healthy)
             return jax.jit(stepped, donate_argnums=(0,))
 
-        mapped = vmap_shards(partial(step_core, cow=self._cow, **kw),
+        mapped = vmap_shards(partial(step_core, kernel=self._kernel, **kw),
                              self.n_shards)
 
         def stepped(table, states, pools, page_revs, batch, rr, healthy):

@@ -306,8 +306,8 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         trace_ops: Optional[List[TraceOp]] = None,
         chaos_events: Optional[List[ChaosEvent]] = None,
         backend: str = "slots", n_replicas: int = 2, n_shards: int = 1,
-        transport: str = "local", write_policy: str = "all",
-        read_policy: str = "rr",
+        kernel: str = "auto", transport: str = "local",
+        write_policy: str = "all", read_policy: str = "rr",
         transport_opts: Optional[Dict[str, Any]] = None,
         geometry: Optional[Dict[str, int]] = None,
         verify_replicas: bool = True, strict: bool = False) -> HarnessResult:
@@ -328,9 +328,9 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         payload_elems=geo["block_bytes"], page_blocks=geo["page_blocks"],
         max_pages=geo["n_pages"], n_extents=geo["n_extents"],
         max_volumes=geo["max_volumes"], n_queues=geo["n_queues"],
-        n_slots=geo["n_slots"], batch=geo["batch"], transport=transport,
-        write_policy=write_policy, read_policy=read_policy,
-        transport_opts=transport_opts)
+        n_slots=geo["n_slots"], batch=geo["batch"], kernel=kernel,
+        transport=transport, write_policy=write_policy,
+        read_policy=read_policy, transport_opts=transport_opts)
     oracle = ByteOracle(mgr.capacity)
     st = _Run(mgr, oracle, trace_seed)
     if trace_ops is None:

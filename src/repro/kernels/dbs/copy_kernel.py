@@ -1,0 +1,49 @@
+"""DBS extent copy (copy-on-write data plane) as a Pallas TPU kernel.
+
+Grid: one step per write op. src/dst extent ids and the CoW mask are
+scalar-prefetch operands; BlockSpec index_maps dereference them so each step
+DMAs exactly one source extent HBM->VMEM and writes it to the destination
+extent. The pool is input/output-aliased — extents not named by any dst id
+are untouched, like a real block device. Masked-off lanes rewrite their
+destination extent with its own contents (a no-op write), keeping the
+kernel branch-free on the DMA path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ref, dst_ref, mask_ref, src_blk, dst_blk, o_ref):
+    i = pl.program_id(0)
+    do_copy = mask_ref[i] != 0
+    o_ref[...] = jnp.where(do_copy, src_blk[...], dst_blk[...])
+
+
+def dbs_copy(pool, src, dst, mask, *, interpret=True):
+    """pool: (E, page, D); src/dst: (N,) int32; mask: (N,) bool/int32."""
+    e, page, d = pool.shape
+    n = src.shape[0]
+    mask_i = mask.astype(jnp.int32)
+    src_c = jnp.maximum(src, 0)
+    dst_c = jnp.maximum(dst, 0)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,          # src, dst, mask
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, page, d),
+                             lambda i, s, dt, m: (s[i], 0, 0)),
+                pl.BlockSpec((1, page, d),
+                             lambda i, s, dt, m: (dt[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, page, d),
+                                   lambda i, s, dt, m: (dt[i], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},        # pool (first tensor arg) -> out
+        interpret=interpret,
+    )(src_c, dst_c, mask_i, pool, pool)

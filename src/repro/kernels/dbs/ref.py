@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the DBS kernel family (CoW copy + rw scatter/gather).
+
+``dbs_rw_write_ref``/``dbs_rw_read_ref`` mirror the KERNELS' row-composition
+formulation (one composed row per routed lane), so registry ``kernel="ref"``
+exercises the Pallas data layout without Pallas — a third implementation the
+equivalence tests triangulate against ``kernel="xla"`` (apply_write_ops'
+gather/scatter formulation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dbs_copy_ref(pool, src, dst, mask):
+    """pool: (E, page, D); src/dst: (N,) extent ids; mask: (N,) bool.
+    Copies pool[src[i]] -> pool[dst[i]] where mask[i]. Lanes must target
+    distinct dst extents (DBS allocation guarantees this)."""
+    safe_src = jnp.maximum(src, 0)
+    safe_dst = jnp.maximum(dst, 0)
+    vals = jnp.where(mask[:, None, None], pool[safe_src], pool[safe_dst])
+    return pool.at[safe_dst].set(vals)
+
+
+def dbs_rw_write_ref(pool, src, dst, lane_of, payload):
+    """Row-composition mirror of ``rw_kernel._write_kernel``: for lane i,
+    ``out[dst[i]]`` = ``pool[src[i]]`` with block j replaced by
+    ``payload[lane_of[i, j]]`` wherever ``lane_of[i, j] >= 0``. Inputs must
+    be pre-routed (ops.py ``_route_writes``): live rows are named by exactly
+    one lane; dump-routed lanes compose a no-op (src == dst, lane_of -1)."""
+    take = lane_of >= 0                                # (B, page)
+    rows = payload[jnp.maximum(lane_of, 0)]            # (B, page, D)
+    vals = jnp.where(take[..., None], rows, pool[jnp.maximum(src, 0)])
+    return pool.at[jnp.maximum(dst, 0)].set(vals)
+
+
+def dbs_rw_read_ref(pool, ext, block):
+    """Hole-masked block gather: pool[ext[i], block[i]], zeros on ext < 0."""
+    e, page = pool.shape[:2]
+    got = pool[jnp.clip(ext, 0, e - 1), jnp.clip(block, 0, page - 1)]
+    return jnp.where((ext >= 0)[:, None], got, 0)

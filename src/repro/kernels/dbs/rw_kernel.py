@@ -1,0 +1,100 @@
+"""``dbs_rw``: the DBS write-scatter / read-gather pair as Pallas kernels.
+
+The write kernel owns the WHOLE write data plane of a batch — CoW extent
+copy AND payload block stores in one pass — where ``dbs_copy`` only ran the
+copy half and left the block scatter to XLA. The read kernel owns the
+round-robin gather, hole masking included. Both follow the jetstream
+ragged-attention model: a 1-D grid with scalar-prefetch operands driving
+the BlockSpec index maps, so each grid step's HBM<->VMEM DMAs are issued
+from data-dependent extent ids and double-buffered by the Pallas pipeline
+emitter (step i+1's row fetch overlaps step i's compute/write-back).
+
+Write grid: one step per batch lane, but only GROUP LEADER lanes touch a
+real extent row — a leader composes its destination row per block from
+either a member lane's payload (``lane_of``) or the source row (the CoW
+source when copying, the destination itself when writing in place) and
+writes the row ONCE. Routing every non-leader/masked lane to a reserved
+dump row is what makes the kernel safe under the interpret-mode staleness
+rule (docs/KERNELS.md): no two grid steps ever write the same live row, and
+no step reads a row another step wrote.
+
+Read grid: one step per read lane; the index map DMAs exactly the (1, 1, D)
+block named by the clamped extent id, and the kernel masks holes
+(``ext < 0``) to zeros in VMEM using the RAW extent id, which rides along
+as a second scalar-prefetch operand.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _write_kernel(src_ref, dst_ref, lane_ref, src_row, payload, o_ref):
+    i = pl.program_id(0)
+    lanes = lane_ref[i]                    # (page,) writing lane, -1 = keep
+    take = lanes >= 0
+    rows = payload[jnp.maximum(lanes, 0)]  # (page, D)
+    o_ref[...] = jnp.where(take[None, :, None], rows[None], src_row[...])
+
+
+def dbs_rw_write(pool, src, dst, lane_of, payload, *, interpret=True):
+    """pool: (E, page, D); src/dst: (B,) int32 extent ids; lane_of: (B, page)
+    int32 block -> payload lane (-1 keeps the source block); payload: (B, D).
+
+    src/dst must be PRE-ROUTED (ops.py ``_route_writes``): every live row is
+    named by exactly one lane, and inert lanes point src == dst at a dump
+    row so their write is a bit-identical no-op.
+    """
+    e, page, d = pool.shape
+    b = src.shape[0]
+    return pl.pallas_call(
+        _write_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,          # src, dst, lane_of
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((1, page, d),
+                             lambda i, s, dt, ln: (s[i], 0, 0)),
+                # whole payload: constant index map, so the pipeline keeps
+                # it resident in VMEM instead of re-fetching per step
+                pl.BlockSpec((b, d), lambda i, s, dt, ln: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, page, d),
+                                   lambda i, s, dt, ln: (dt[i], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},        # pool (first tensor arg) -> out
+        interpret=interpret,
+    )(src, dst, lane_of, pool, payload)
+
+
+def _read_kernel(ext_ref, extc_ref, blk_ref, blk, o_ref):
+    i = pl.program_id(0)
+    o_ref[...] = jnp.where(ext_ref[i] >= 0, blk[...], 0)
+
+
+def dbs_rw_read(pool, ext, block, *, interpret=True):
+    """pool: (E, page, D); ext: (B,) int32, -1 = hole (reads as zeros);
+    block: (B,) int32 block offset within the page. Returns (B, D)."""
+    e, page, d = pool.shape
+    b = ext.shape[0]
+    extc = jnp.clip(ext, 0, e - 1)          # clamped id drives the DMA...
+    blkc = jnp.clip(block, 0, page - 1)
+    out = pl.pallas_call(
+        _read_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,          # ext (raw), ext (clamped), block
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((1, 1, d),
+                             lambda i, e_, ec, bk: (ec[i], bk[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, d),
+                                   lambda i, e_, ec, bk: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, 1, d), pool.dtype),
+        interpret=interpret,
+    )(ext, extc, blkc, pool)                # ...the raw id masks the hole
+    return out[:, 0, :]

@@ -1,2 +1,6 @@
-from repro.kernels.dbs_copy.ops import (dbs_copy, dbs_copy_pool,  # noqa: F401
-                                        dbs_copy_reference)
+"""Deprecation shim: ``repro.kernels.dbs_copy`` moved into the unified
+``repro.kernels.dbs`` package (which adds the ``dbs_rw`` scatter/gather
+family and the kernel registry). These re-exports keep seed imports
+working; new code should import ``repro.kernels.dbs``."""
+from repro.kernels.dbs import (dbs_copy, dbs_copy_pool,  # noqa: F401
+                               dbs_copy_reference)

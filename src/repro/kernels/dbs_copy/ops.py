@@ -1,74 +1,4 @@
-"""jit'd wrappers for the DBS extent-copy kernel.
-
-``dbs_copy`` is the raw (E, page, D) entry point; ``dbs_copy_pool`` adapts
-an engine payload pool with arbitrary trailing payload dims — it is the form
-the fused engine step (core/fused.py) places on the copy-on-write hot path.
-See docs/KERNELS.md for the grid/BlockSpec design.
-"""
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.dbs_copy.kernel import dbs_copy as _dbs_copy_kernel
-from repro.kernels.dbs_copy.ref import dbs_copy_ref
-
-
-def default_interpret() -> bool:
-    """Repo convention: Pallas kernels run compiled on TPU and fall back to
-    ``interpret=True`` everywhere else (docs/KERNELS.md)."""
-    return jax.default_backend() != "tpu"
-
-
-_use_interpret = default_interpret  # back-compat alias
-
-
-@jax.jit
-def dbs_copy(pool, src, dst, mask):
-    """Copy pool[src[i]] -> pool[dst[i]] where mask[i] (CoW data plane).
-
-    pool: (E, page, D); trailing payload dims must be pre-flattened to D.
-    """
-    return _dbs_copy_kernel(pool, src, dst, mask,
-                            interpret=default_interpret())
-
-
-def dbs_copy_pool(pool, src, dst, mask, *, interpret=None, scratch=False):
-    """Extent CoW copy over an (E, page, *payload) engine pool.
-
-    Flattens the trailing payload dims to the kernel's (E, page, D) layout
-    and restores them. Not jitted itself — it is traced inside the caller's
-    program (the fused engine step), which is the whole point: the copy
-    happens device-side with no intervening dispatch.
-
-    Masked-off lanes are redirected to a scratch extent rather than clamped
-    into the live range: grid steps run sequentially against the aliased
-    output, but interpret mode reads each step's inputs from the *original*
-    buffer, so a masked lane clamped onto a real lane's dst would overwrite
-    the copy with stale contents. With ``scratch=True`` the pool's LAST row
-    is that dump — the caller guarantees the allocator never hands it out
-    (ReplicaGroup sizes pools to n_extents+1), keeping the kernel fully
-    aliased. With ``scratch=False`` a zero row is appended and sliced off
-    instead (two pool copies — fine for ad-hoc use, not the hot path).
-    src/dst may be -1 on masked lanes (the WriteOps NULL convention); real
-    lanes must be in range.
-    """
-    if interpret is None:
-        interpret = default_interpret()
-    e, page = pool.shape[:2]
-    flat = pool.reshape(e, page, -1)
-    m = mask.astype(bool)
-    if scratch:
-        dump = e - 1                 # reserved row, never allocator-visible
-        padded = flat
-    else:
-        dump = e
-        padded = jnp.concatenate(
-            [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)])
-    src_r = jnp.where(m, jnp.maximum(src, 0), dump)  # masked: dump->dump
-    dst_r = jnp.where(m, jnp.maximum(dst, 0), dump)
-    out = _dbs_copy_kernel(padded, src_r, dst_r, m, interpret=interpret)
-    return out[:e].reshape(pool.shape)
-
-
-dbs_copy_reference = dbs_copy_ref
+"""Deprecation shim: the ops surface lives in ``repro.kernels.dbs.ops``."""
+from repro.kernels.dbs.ops import (_use_interpret, dbs_copy,  # noqa: F401
+                                   dbs_copy_pool, dbs_copy_reference,
+                                   default_interpret)

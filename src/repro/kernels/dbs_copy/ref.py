@@ -1,14 +1,2 @@
-"""Pure-jnp oracle for the DBS extent copy (CoW data plane)."""
-from __future__ import annotations
-
-import jax.numpy as jnp
-
-
-def dbs_copy_ref(pool, src, dst, mask):
-    """pool: (E, page, D); src/dst: (N,) extent ids; mask: (N,) bool.
-    Copies pool[src[i]] -> pool[dst[i]] where mask[i]. Lanes must target
-    distinct dst extents (DBS allocation guarantees this)."""
-    safe_src = jnp.maximum(src, 0)
-    safe_dst = jnp.maximum(dst, 0)
-    vals = jnp.where(mask[:, None, None], pool[safe_src], pool[safe_dst])
-    return pool.at[safe_dst].set(vals)
+"""Deprecation shim: the oracle lives in ``repro.kernels.dbs.ref``."""
+from repro.kernels.dbs.ref import dbs_copy_ref  # noqa: F401

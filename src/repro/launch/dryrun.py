@@ -28,10 +28,18 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell, per_device_bytes
 from repro.utils import hlo as hlo_utils
 
-# v5e hardware constants (assignment brief)
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
-LINK_BW = 50e9               # bytes/s / link ICI
+from repro.utils.machine import machine_profile
+
+# machine peaks: detected-or-overridable (utils/machine.py); the v5e
+# assignment-brief numbers remain the fallback
+_PROFILE = None
+
+
+def _peaks():
+    global _PROFILE
+    if _PROFILE is None:
+        _PROFILE = machine_profile()
+    return _PROFILE
 
 
 ACCOUNTING_OVERRIDES = dict(scan_layers=False, microbatches=1,
@@ -176,9 +184,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "model_flops_total": useful,
         "hlo_useful_ratio": useful / max(flops * n_chips, 1.0),
         # roofline terms (seconds)
-        "t_compute": flops / PEAK_FLOPS,
-        "t_memory": bytes_acc / HBM_BW,
-        "t_collective": coll_bytes / LINK_BW,
+        "t_compute": flops / _peaks().peak_flops,
+        "t_memory": bytes_acc / _peaks().hbm_bw,
+        "t_collective": coll_bytes / _peaks().link_bw,
         "analytic_state_bytes_per_device": per_device_bytes(mesh, cell.args),
     }
     terms = {"compute": out["t_compute"], "memory": out["t_memory"],

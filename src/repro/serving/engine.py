@@ -154,7 +154,7 @@ class ServeEngine:
         external data plane (the per-layer KV pools)."""
         ops = self.volumes.alloc_pages(vols, pages, mask=mask)
         if bool(jax.device_get(jnp.any(ops.cow_src >= 0))):
-            from repro.kernels.dbs_copy import dbs_copy
+            from repro.kernels.dbs import dbs_copy
             for i, c in enumerate(self.caches):
                 if c is not None and "pool_k" in c:
                     c = dict(c)

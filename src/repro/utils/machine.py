@@ -1,0 +1,82 @@
+"""Machine roofline profile: detected-or-overridable peak numbers.
+
+The dry-run/roofline analysis used to hardcode one TPU generation's peaks,
+so bytes/s-vs-peak fractions were silently wrong on any other box. One
+``machine_profile()`` now feeds every consumer (``launch/dryrun.py``,
+``benchmarks/roofline.py``, the ladder's kernel gate), resolved in priority
+order: explicit values (CLI flags) > ``REPRO_PEAK_FLOPS`` /
+``REPRO_HBM_BW`` / ``REPRO_LINK_BW`` env vars > the jax device kind >
+the v5e assignment-brief defaults (flagged ``assumed=True`` so reports can
+say so).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MachineProfile:
+    name: str
+    peak_flops: float       # peak matmul flops/s per chip (bf16)
+    hbm_bw: float           # HBM bytes/s per chip
+    link_bw: float          # ICI bytes/s per link
+    assumed: bool = False   # True when nothing was detected or overridden
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# the assignment brief's v5e numbers — the old hardcoded constants
+V5E = MachineProfile("tpu-v5e", 197e12, 819e9, 50e9)
+
+# device_kind (prefix-matched, case-insensitive) -> published peaks
+_KNOWN = {
+    "tpu v5 lite": V5E,
+    "tpu v5e": V5E,
+    "tpu v5p": MachineProfile("tpu-v5p", 459e12, 2765e9, 100e9),
+    "tpu v5": MachineProfile("tpu-v5p", 459e12, 2765e9, 100e9),
+    "tpu v4": MachineProfile("tpu-v4", 275e12, 1228e9, 50e9),
+    "tpu v6 lite": MachineProfile("tpu-v6e", 918e12, 1640e9, 100e9),
+    "tpu v6e": MachineProfile("tpu-v6e", 918e12, 1640e9, 100e9),
+}
+
+
+def _detect() -> Optional[MachineProfile]:
+    try:
+        import jax
+        kind = jax.devices()[0].device_kind.lower()
+    except Exception:
+        return None
+    for prefix, prof in _KNOWN.items():
+        if kind.startswith(prefix):
+            return prof
+    return None
+
+
+def _env(name: str) -> Optional[float]:
+    v = os.environ.get(name)
+    return float(v) if v else None
+
+
+def machine_profile(peak_flops: Optional[float] = None,
+                    hbm_bw: Optional[float] = None,
+                    link_bw: Optional[float] = None) -> MachineProfile:
+    """Resolve the machine's roofline peaks (module docstring priority)."""
+    peak_flops = peak_flops if peak_flops is not None else \
+        _env("REPRO_PEAK_FLOPS")
+    hbm_bw = hbm_bw if hbm_bw is not None else _env("REPRO_HBM_BW")
+    link_bw = link_bw if link_bw is not None else _env("REPRO_LINK_BW")
+    base = _detect()
+    assumed = base is None and not (peak_flops and hbm_bw and link_bw)
+    base = base or V5E
+    name = base.name if base is not V5E or not assumed else "tpu-v5e-assumed"
+    if peak_flops or hbm_bw or link_bw:
+        name += "+overrides"
+    return MachineProfile(
+        name=name,
+        peak_flops=peak_flops if peak_flops is not None else base.peak_flops,
+        hbm_bw=hbm_bw if hbm_bw is not None else base.hbm_bw,
+        link_bw=link_bw if link_bw is not None else base.link_bw,
+        assumed=assumed)

@@ -96,3 +96,17 @@ def test_dbs_copy_sweep(e, page, d, n):
         if i not in touched:
             np.testing.assert_allclose(np.asarray(out[i]),
                                        np.asarray(pool[i]))
+
+
+def test_dbs_copy_shim_reexports_dbs_package():
+    """`kernels/dbs_copy` is a deprecation shim over `kernels/dbs`: same
+    objects, not copies (so monkeypatching/config hits one implementation)."""
+    from repro.kernels import dbs as pkg
+    from repro.kernels import dbs_copy as shim
+    assert shim.dbs_copy is pkg.dbs_copy
+    assert shim.dbs_copy_pool is pkg.dbs_copy_pool
+    assert shim.dbs_copy_reference is pkg.dbs_copy_reference
+    from repro.kernels.dbs_copy import ops as shim_ops
+    from repro.kernels.dbs import ops as pkg_ops
+    assert shim_ops.dbs_copy is pkg_ops.dbs_copy
+    assert shim_ops.default_interpret is pkg_ops.default_interpret
