@@ -220,10 +220,20 @@ class VolumeManager:
                  null_storage: bool = False, cow: str = "auto",
                  kernel: str = "auto", transport: str = "local",
                  write_policy: str = "all", read_policy: str = "rr",
-                 transport_opts: Optional[Dict[str, Any]] = None):
+                 transport_opts: Optional[Dict[str, Any]] = None,
+                 payload_shape: Optional[Tuple[int, ...]] = None):
+        # payload_shape overrides the byte-API's flat (payload_elems,) lane
+        # layout with an arbitrary per-block tensor — the serving engine
+        # stores one token's K/V for every layer in one block
+        # ((n_planes, KV, hd), serving/engine.py). The byte-addressed
+        # pread/pwrite surface assumes the flat layout; embedders with a
+        # custom shape drive raw Requests + the device views below instead.
+        self.payload_shape = (tuple(payload_shape)
+                              if payload_shape is not None
+                              else (payload_elems,))
         self.engine = Engine(EngineConfig(
             comm=backend, n_shards=n_shards, n_replicas=n_replicas,
-            payload_shape=(payload_elems,), page_blocks=page_blocks,
+            payload_shape=self.payload_shape, page_blocks=page_blocks,
             n_extents=n_extents, max_volumes=max_volumes,
             max_pages=max_pages, n_queues=n_queues, n_slots=n_slots,
             batch=batch, storage=storage, null_backend=null_backend,
@@ -535,9 +545,76 @@ class VolumeManager:
 
     def alloc_pages(self, vols, pages, mask=None, bits=None):
         """Page-granular allocation/CoW on the host backend's state; returns
-        the DBS ``WriteOps`` for an external data plane (serving KV pools)."""
+        the DBS ``WriteOps`` for an external data plane (serving KV pools).
+        Host backend only — on the fused/sharded engines page allocation IS
+        the write SQE path: submit zero-payload writes and ``flush()``, and
+        every lane's allocation + CoW resolution rides ONE pumped program
+        (the batching the serving engine's per-step admission relies on)."""
         return self.engine.impl.alloc_pages(vols, pages, mask=mask,
                                             bits=bits)
+
+    # --------------------------------------------- device-resident KV views
+    # The zero-copy serving path (serving/engine.py) reads these: the
+    # extent map a paged-attention kernel indexes through, and the engine
+    # payload pools it treats as the KV cache. All views are device arrays —
+    # nothing here syncs to the host.
+    def device_extent_map(self):
+        """The device-resident flattened extent map as ONE (V, P) int32
+        table over *global* volume ids (holes/unallocated pages -1).
+
+        host backend: the oracle state's table. fused: replica 0's (the
+        replicas execute identical control sequences — their tables agree).
+        sharded: the per-shard (S, V_local, P) tables are fused into global
+        coordinates — extent ids are offset by ``shard * (E+1)`` to index
+        the flattened pool of ``device_pools`` and rows are reordered so
+        row ``v`` is global volume ``v`` (= local * S + shard)."""
+        impl = self.engine.impl
+        if hasattr(impl, "state"):                      # host oracle
+            return impl.state.table
+        storage = self.engine.backend
+        if storage is None:
+            raise RuntimeError("null backend holds no extent map")
+        if hasattr(storage, "states"):                  # sharded (stacked)
+            import jax.numpy as jnp
+            tbl = storage.states[0].table               # (S, Vl, P)
+            s = storage.n_shards
+            stride = self.engine.cfg.n_extents + 1      # pool rows per shard
+            off = (jnp.arange(s, dtype=tbl.dtype) * stride)[:, None, None]
+            flat = jnp.where(tbl >= 0, tbl + off, -1)
+            return flat.transpose(1, 0, 2).reshape(-1, tbl.shape[2])
+        states, _pools = storage.device_state()         # fused ReplicaGroup
+        return states[0].table
+
+    def device_pools(self):
+        """The engine payload pools as a tuple of device arrays, one per
+        (healthy) replica, each ``(rows, page_blocks, *payload_shape)`` —
+        rows = E+1 on the fused engine, S*(E+1) on the sharded pool (the
+        per-shard pools concatenated; ``device_extent_map`` hands out row
+        ids in exactly this coordinate system)."""
+        storage = self.engine.backend
+        if storage is None:
+            raise RuntimeError("null backend holds no pools")
+        if hasattr(storage, "states"):                  # sharded (stacked)
+            _st, pools, _h = storage.device_state()
+            return tuple(p.reshape((-1,) + p.shape[2:]) for p in pools)
+        _st, pools = storage.device_state()
+        return tuple(pools)
+
+    def set_device_pools(self, pools) -> None:
+        """Write mutated pools (same shapes ``device_pools`` returned) back
+        to the replicas — the commit half of an external compute step that
+        scattered into the pools (the serving decode program)."""
+        storage = self.engine.backend
+        if storage is None:
+            raise RuntimeError("null backend holds no pools")
+        if hasattr(storage, "states"):                  # sharded (stacked)
+            states, cur, _h = storage.device_state()
+            reshaped = tuple(p.reshape(c.shape)
+                             for p, c in zip(pools, cur))
+            storage.set_device_state(states, reshaped)
+            return
+        states, _cur = storage.device_state()
+        storage.set_device_state(states, tuple(pools))
 
     def __repr__(self):
         return (f"VolumeManager(backend={self.backend_name!r}, "

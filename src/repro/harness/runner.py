@@ -106,7 +106,8 @@ class HarnessResult:
 def _healthy_replicas(storage) -> Optional[List[int]]:
     """Indices of healthy replicas when the storage is a host-dispatch
     ``ReplicaGroup`` (the plane replica-level chaos targets); None on
-    backends whose health lives elsewhere (sharded masks, no replicas)."""
+    backends whose health lives elsewhere (sharded masks — see
+    ``_Run.sharded`` — or no replicas at all)."""
     reps = getattr(storage, "replicas", None)
     if reps is None:
         return None
@@ -122,6 +123,12 @@ class _Run:
         self.oracle = oracle
         self.trace_seed = trace_seed
         self.storage = mgr.engine.backend
+        # sharded replica plane: health is a dense (S, R) mask, not a list
+        # of Replica objects — replica chaos mirrors each verb across ALL
+        # shards so the S slices stay in lock-step. Gated strictly on
+        # comm="sharded": the ring backend stacks the same storage but
+        # serves control in-band, and its scenario digest must not move.
+        self.sharded = mgr.engine.cfg.comm == "sharded"
         self.vols: List[Volume] = []
         self.clones: List[Volume] = []
         # (op-or-None, future, expected-bytes-or-None) awaiting the flush
@@ -144,6 +151,44 @@ class _Run:
         t = ts[replica]
         return t if hasattr(t, "latency") else None   # simnet links only
 
+    def _sharded_repl_event(self, ev: ChaosEvent) -> bool:
+        """Apply one replica-plane event across every shard of a sharded
+        group (all-shard mirror keeps health uniform). Returns True when
+        the event applied, False for a deterministic skip."""
+        ctl = self.mgr.engine.control
+        g = self.storage
+        S, R = g.n_shards, g.n_replicas
+        h = g.healthy                                   # (S, R) bool
+        if ev.action == "fail":
+            if (not 0 <= ev.replica < R
+                    or not bool(h[:, ev.replica].all())
+                    or int(h.sum(axis=1).min()) < 2):
+                return False
+            for s in range(S):
+                ctl("fail", shard=s, replica=ev.replica)
+        elif ev.action == "rebuild":
+            if not 0 <= ev.replica < R or bool(h[:, ev.replica].any()):
+                return False
+            for s in range(S):
+                ctl("rebuild", shard=s, replica=ev.replica)
+        elif ev.action == "quorum_loss":
+            up = [r for r in range(R) if bool(h[:, r].all())]
+            if len(up) < 2:
+                return False
+            keep = ev.replica if ev.replica in up else up[0]
+            for r in up:
+                if r != keep:
+                    for s in range(S):
+                        ctl("fail", shard=s, replica=r)
+        else:                                           # recover
+            if bool(h.all()):
+                return False
+            for s in range(S):
+                for r in range(R):
+                    if not h[s, r]:
+                        ctl("rebuild", shard=s, replica=r)
+        return True
+
     def apply_event(self, ev: ChaosEvent) -> None:
         name = f"@{ev.index} {ev.action}"
         ctl = self.mgr.engine.control
@@ -151,6 +196,12 @@ class _Run:
         try:
             if ev.action in ("fail", "rebuild", "quorum_loss", "recover"):
                 if healthy is None:
+                    if self.sharded:
+                        if self._sharded_repl_event(ev):
+                            self.applied.append(name)
+                        else:
+                            self.skipped.append(name)
+                        return
                     self.skipped.append(name + " (no replica plane)")
                     return
                 if ev.action == "fail":
@@ -276,6 +327,12 @@ class _Run:
             for r in range(len(self.storage.replicas)):
                 if r not in healthy:
                     ctl("rebuild", replica=r)           # final rebuild
+        elif self.sharded:
+            h = self.storage.healthy
+            for s in range(self.storage.n_shards):
+                for r in range(self.storage.n_replicas):
+                    if not h[s, r]:
+                        ctl("rebuild", shard=s, replica=r)
         volumes = self.vols + self.clones
         blob = bytearray()
 
@@ -287,16 +344,29 @@ class _Run:
                              f"{tag} vol{v.vid}")
 
         read_all("end-of-trace")
-        n = len(self.storage.replicas) if healthy is not None else 0
+        if healthy is not None:
+            n = len(self.storage.replicas)
+        elif self.sharded:
+            n = self.storage.n_replicas
+        else:
+            n = 0
         if n > 1 and not mgr.engine.cfg.null_storage:
             # force the read path onto EACH surviving replica in turn
+            # (every shard at once on the sharded plane)
+            def repl_ctl(kind: str, r: int) -> None:
+                if self.sharded:
+                    for s in range(self.storage.n_shards):
+                        ctl(kind, shard=s, replica=r)
+                else:
+                    ctl(kind, replica=r)
+
             for serve in range(n):
                 others = [r for r in range(n) if r != serve]
                 for r in others:
-                    ctl("fail", replica=r)
+                    repl_ctl("fail", r)
                 read_all(f"replica {serve}")
                 for r in others:
-                    ctl("rebuild", replica=r)
+                    repl_ctl("rebuild", r)
         return bytes(blob)
 
 
@@ -443,6 +513,21 @@ SCENARIOS: Dict[str, Dict[str, Any]] = {
     # wait ticks), rr vs latency-weighted reads — the P99/P999 gates
     "straggler/rr": dict(read_policy="rr", **_STRAGGLER),
     "straggler/latency": dict(read_policy="latency", **_STRAGGLER),
+    # the serving shape (PR 8): KV-append traffic over the sharded pool —
+    # write-heavy, sequential, zipf-hot volumes (prompt-prefix sharing),
+    # block-aligned like the decode scatter; clone-boosted chaos (session
+    # fork) plus all-shard replica fail/rebuild mid-stream — a replica
+    # dying mid-decode must not corrupt any session's bytes. Link actions
+    # are zeroed (stacked endpoints ride the device transport, no simnet).
+    "serve/steady": dict(
+        backend="sharded", n_shards=2, n_replicas=2,
+        trace=TraceConfig(n_ops=160, n_volumes=6, read_frac=0.25,
+                          seq_frac=0.9, unaligned_frac=0.0, zipf_a=1.2),
+        chaos=ChaosConfig(n_events=8,
+                          weights=(("clone", 3.0), ("straggler", 0.0),
+                                   ("heal", 0.0), ("drop_on", 0.0),
+                                   ("drop_off", 0.0))),
+        verify_replicas=True),
 }
 
 # the replay-determinism gate re-runs this scenario and compares digests

@@ -7,9 +7,21 @@ TPU analogue of DBS reading 1 MB extents off NVMe with O(1) lookups. The
 online-softmax accumulator persists in VMEM scratch across the sequential
 page grid dimension.
 
-Pages past a sequence's length are skipped with @pl.when (their DMA is
-still issued by the prefetcher — acceptable because the serving engine
-sizes tables to ceil(len/page); fully-empty tails only exist transiently).
+Hole pages (``table[vol, page] == -1``, exactly the sentinel
+``dbs_rw_read`` masks) are handled the same way as in the DBS data plane:
+the index map clamps the extent id to 0 so the prefetcher never DMAs a
+negative row, and the kernel skips the page entirely — a hole contributes
+nothing to the softmax. Pages past a sequence's length are skipped with
+@pl.when too (their DMA is still issued by the prefetcher — acceptable
+because the serving engine sizes tables to ceil(len/page); fully-empty
+tails only exist transiently).
+
+``paged_attention_pool_fwd`` is the zero-copy serving entry point: K and V
+are not separate caches but two *planes* of ONE engine extent pool
+``(E, page, n_planes, KV, hd)`` — the very pool the fused/sharded step
+scatters write SQEs into (core/fused.py). The kernel gathers directly from
+that pool through the volume's extent map; no intermediate copy of the KV
+cache ever exists.
 """
 from __future__ import annotations
 
@@ -37,15 +49,19 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
 
     length = len_ref[b]
     base = ip * page
-    run = base < length
+    # hole pages (extent -1: never written, or trimmed) contribute nothing —
+    # the same sentinel dbs_rw_read masks on the block-device read path
+    run = (base < length) & (tbl_ref[b, ip] >= 0)
     if window:  # pages wholly below the sliding window are skipped too
         run &= (base + page - 1) > (length - 1 - window)
 
     @pl.when(run)
     def _step():
         q = q_ref[0].astype(jnp.float32)                     # (H, hd)
-        k = k_ref[0].astype(jnp.float32)                     # (page, KV, hd)
-        v = v_ref[0].astype(jnp.float32)
+        # k/v blocks arrive as (page, KV, hd) from split pools or
+        # (page, 1, KV, hd) as one plane of the engine pool — same layout
+        k = k_ref[...].reshape(page, kv, -1).astype(jnp.float32)
+        v = v_ref[...].reshape(page, kv, -1).astype(jnp.float32)
         h, d = q.shape
         qg = q.reshape(kv, g, d)
         logits = jax.lax.dot_general(
@@ -77,17 +93,12 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
         o_ref[0] = out.reshape(kv * g, -1).astype(o_ref.dtype)
 
 
-def paged_attention_fwd(q, pool_k, pool_v, block_table, lengths, *,
-                        window=0, logit_cap=0.0, scale=None, interpret=True):
-    """q: (B,H,hd); pools: (E,page,KV,hd_{k,v}); block_table: (B,P);
-    lengths: (B,). Returns (B,H,hd_v)."""
+def _call(q, operands, in_specs, block_table, lengths, *, page, kv, dv,
+          window, logit_cap, scale, interpret):
     b, h, d = q.shape
-    e, page, kv, dk = pool_k.shape
-    dv = pool_v.shape[-1]
     p_max = block_table.shape[1]
     g = h // kv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
-
     kern = functools.partial(_kernel, scale=scale, window=window,
                              logit_cap=logit_cap, page=page, kv=kv, g=g)
     return pl.pallas_call(
@@ -97,11 +108,7 @@ def paged_attention_fwd(q, pool_k, pool_v, block_table, lengths, *,
             grid=(b, p_max),
             in_specs=[
                 pl.BlockSpec((1, h, d), lambda b_, p_, tbl, ln: (b_, 0, 0)),
-                pl.BlockSpec((1, page, kv, dk),
-                             lambda b_, p_, tbl, ln: (tbl[b_, p_], 0, 0, 0)),
-                pl.BlockSpec((1, page, kv, dv),
-                             lambda b_, p_, tbl, ln: (tbl[b_, p_], 0, 0, 0)),
-            ],
+            ] + in_specs,
             out_specs=pl.BlockSpec((1, h, dv),
                                    lambda b_, p_, tbl, ln: (b_, 0, 0)),
             scratch_shapes=[
@@ -112,4 +119,50 @@ def paged_attention_fwd(q, pool_k, pool_v, block_table, lengths, *,
         ),
         out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
         interpret=interpret,
-    )(block_table, lengths, q, pool_k, pool_v)
+    )(block_table, lengths, q, *operands)
+
+
+def paged_attention_fwd(q, pool_k, pool_v, block_table, lengths, *,
+                        window=0, logit_cap=0.0, scale=None, interpret=True):
+    """q: (B,H,hd); pools: (E,page,KV,hd_{k,v}); block_table: (B,P);
+    lengths: (B,). Hole pages (extent -1) are skipped. Returns (B,H,hd_v)."""
+    e, page, kv, dk = pool_k.shape
+    dv = pool_v.shape[-1]
+    in_specs = [
+        # clamp: the prefetcher must never DMA a negative extent row; the
+        # kernel's `run` guard discards whatever row 0 holds for hole pages
+        pl.BlockSpec((1, page, kv, dk),
+                     lambda b_, p_, tbl, ln: (jnp.maximum(tbl[b_, p_], 0),
+                                              0, 0, 0)),
+        pl.BlockSpec((1, page, kv, dv),
+                     lambda b_, p_, tbl, ln: (jnp.maximum(tbl[b_, p_], 0),
+                                              0, 0, 0)),
+    ]
+    return _call(q, (pool_k, pool_v), in_specs, block_table, lengths,
+                 page=page, kv=kv, dv=dv, window=window, logit_cap=logit_cap,
+                 scale=scale, interpret=interpret)
+
+
+def paged_attention_pool_fwd(q, pool, block_table, lengths, *, k_plane,
+                             v_plane, window=0, logit_cap=0.0, scale=None,
+                             interpret=True):
+    """Zero-copy variant: gather K/V straight out of ONE engine extent pool.
+
+    q: (B,H,hd); pool: (E, page, n_planes, KV, hd) — the fused/sharded
+    engine's payload pool, where plane ``2*l`` holds layer l's keys and
+    ``2*l+1`` its values (serving/engine.py); block_table: (B,P) rows of
+    the volume extent map (holes -1); lengths: (B,). The BlockSpec index
+    maps stream exactly two (page, KV, hd) planes of each owned extent —
+    the block device IS the KV cache, no staging copy."""
+    e, page, n_planes, kv, d = pool.shape
+    in_specs = [
+        pl.BlockSpec((1, page, 1, kv, d),
+                     lambda b_, p_, tbl, ln: (jnp.maximum(tbl[b_, p_], 0),
+                                              0, k_plane, 0, 0)),
+        pl.BlockSpec((1, page, 1, kv, d),
+                     lambda b_, p_, tbl, ln: (jnp.maximum(tbl[b_, p_], 0),
+                                              0, v_plane, 0, 0)),
+    ]
+    return _call(q, (pool, pool), in_specs, block_table, lengths,
+                 page=page, kv=kv, dv=d, window=window, logit_cap=logit_cap,
+                 scale=scale, interpret=interpret)

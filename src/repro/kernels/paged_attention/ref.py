@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for paged decode attention (DBS read through block table)."""
+"""Pure-jnp oracle for paged decode attention (DBS read through block table).
+
+Hole semantics match the DBS data plane (``dbs_rw_read`` / the fused read
+gather): a block-table entry of -1 is an unallocated page — the gather
+clamps the index so nothing reads out of bounds, and every position on a
+hole page is masked out of the softmax.
+"""
 from __future__ import annotations
 
 import math
@@ -11,22 +17,25 @@ NEG_INF = -1e30
 
 def paged_attention_ref(q, pool_k, pool_v, block_table, lengths, *,
                         window: int = 0, logit_cap: float = 0.0, scale=None):
-    """q: (B,H,hd); pools: (E,page,KV,hd); block_table: (B,P) extent ids;
-    lengths: (B,) tokens in cache (query attends to positions < lengths,
-    i.e. the query position is lengths-1 having just been written).
-    Returns (B,H,hd) fp32."""
+    """q: (B,H,hd); pools: (E,page,KV,hd); block_table: (B,P) extent ids
+    (holes -1); lengths: (B,) tokens in cache (query attends to positions
+    < lengths, i.e. the query position is lengths-1 having just been
+    written). Returns (B,H,hd) fp32."""
     b, h, d = q.shape
     e, page, kv, _ = pool_k.shape
     p_max = block_table.shape[1]
     g = h // kv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
 
-    k = pool_k[block_table]                         # (B,P,page,KV,hd)
-    v = pool_v[block_table]
+    tbl = jnp.maximum(block_table, 0)               # clamped gather
+    k = pool_k[tbl]                                 # (B,P,page,KV,hd)
+    v = pool_v[tbl]
     k = k.reshape(b, p_max * page, kv, -1)
     v = v.reshape(b, p_max * page, kv, -1)
     pos = jnp.arange(p_max * page)
     valid = pos[None, :] < lengths[:, None]         # (B,S)
+    # hole pages contribute nothing, whatever extent row the clamp gathered
+    valid &= jnp.repeat(block_table >= 0, page, axis=1)
     if window and window > 0:
         valid &= pos[None, :] > (lengths[:, None] - 1 - window)
 
@@ -36,5 +45,18 @@ def paged_attention_ref(q, pool_k, pool_v, block_table, lengths, *,
         logits = jnp.tanh(logits / logit_cap) * logit_cap
     logits = jnp.where(valid[:, None, None], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid[:, None, None], w, 0.0)     # all-hole lanes -> 0
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(b, h, v.shape[-1])
+
+
+def paged_attention_pool_ref(q, pool, block_table, lengths, *, k_plane,
+                             v_plane, window: int = 0, logit_cap: float = 0.0,
+                             scale=None):
+    """Plane-indexed oracle over ONE engine extent pool
+    (E, page, n_planes, KV, hd) — the XLA twin of
+    ``kernel.paged_attention_pool_fwd`` (serving's ``kernel="xla"`` route
+    and the parity tests' reference)."""
+    return paged_attention_ref(q, pool[:, :, k_plane], pool[:, :, v_plane],
+                               block_table, lengths, window=window,
+                               logit_cap=logit_cap, scale=scale)

@@ -321,12 +321,16 @@ def paged_write_local(pool_k, pool_v, block_table, pos, k_new, v_new,
     page_idx = pos // page
     ext = block_table[jnp.arange(b), page_idx]
     off = pos % page
-    owned = (page_idx % stride) == rank
-    ext_w = jnp.where(owned, ext, 0)
+    # hole lanes (extent -1) must drop, not wrap to the pool's last row via
+    # negative indexing — same sentinel the DBS read path masks
+    owned = ((page_idx % stride) == rank) & (ext >= 0)
+    ext_w = jnp.where(owned, ext, -1)
     pk = pool_k.at[ext_w, off].set(
-        jnp.where(owned[:, None, None], k_new[:, 0], pool_k[ext_w, off]))
+        jnp.where(owned[:, None, None], k_new[:, 0], pool_k[ext_w, off]),
+        mode="drop")
     pv = pool_v.at[ext_w, off].set(
-        jnp.where(owned[:, None, None], v_new[:, 0], pool_v[ext_w, off]))
+        jnp.where(owned[:, None, None], v_new[:, 0], pool_v[ext_w, off]),
+        mode="drop")
     return pk, pv
 
 

@@ -127,6 +127,160 @@ def test_multiqueue_frontend_backpressure():
     assert len(admitted2) == 4
 
 
+def test_fork_cow_shares_prefix_extents_and_matches_reference(small_model):
+    """Zero-copy fork property (PR 8): fork mid-decode shares the prefix
+    EXTENTS (no copy — the clone's extent-map row equals the parent's),
+    diverging writes CoW only the frontier page, and both sessions' post-
+    fork logits are bit-identical to two independently-decoded sessions."""
+    cfg, params = small_model
+    page = cfg.page_blocks
+    eng = ServeEngine(cfg, params, n_slots=4, max_len=64, record_logits=True)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=(9,))
+    eng.submit(GenRequest(req_id=0, prompt=prompt, max_new=12))
+    for _ in range(4):
+        eng.step()
+    parent = eng.live[0]
+    child = eng.fork(0, 1, max_new=8)
+    assert child is not None
+    tbl = np.asarray(jax.device_get(eng.volumes.device_extent_map()))
+    prow, crow = tbl[parent.volume].copy(), tbl[child.volume].copy()
+    np.testing.assert_array_equal(prow, crow)      # shared, not copied
+    assert (prow >= 0).sum() >= 2                  # a real prefix exists
+    frontier = (9 + 4) // page                     # page holding fork pos
+    for _ in range(2):                             # diverge both sides
+        eng.step()
+    tbl2 = np.asarray(jax.device_get(eng.volumes.device_extent_map()))
+    prow2, crow2 = tbl2[parent.volume], tbl2[child.volume]
+    # frontier page CoW'd apart; full prefix pages still shared
+    assert prow2[frontier] != crow2[frontier], (prow2, crow2)
+    for p in range(frontier):
+        assert prow2[p] == crow2[p] == prow[p]
+    # drain both sessions, then decode the same two streams independently
+    for _ in range(16):
+        eng.step()
+    ref = ServeEngine(cfg, params, n_slots=4, max_len=64, record_logits=True)
+    ref.submit(GenRequest(req_id=0, prompt=prompt.copy(), max_new=12))
+    ref.submit(GenRequest(req_id=1, prompt=prompt.copy(), max_new=12))
+    ref.run(max_steps=20)
+    assert eng.live[0].out_tokens == ref.live[0].out_tokens[:12]
+    # child's trace starts at the fork step (absolute step 4)
+    np.testing.assert_array_equal(
+        np.stack(eng.live[0].logit_trace[4:]),
+        np.stack(ref.live[0].logit_trace[4:12]))
+    np.testing.assert_array_equal(
+        np.stack(eng.live[1].logit_trace),
+        np.stack(ref.live[1].logit_trace[4:4 + len(eng.live[1].logit_trace)]))
+
+
+def test_paged_attention_kernel_matches_ref_ragged_window_holes():
+    """Parity of the Pallas paged-attention kernel (split-pool and pooled
+    zero-copy variants) against the jnp oracle over ragged lengths, sliding
+    windows, logit caps and hole pages."""
+    from repro.kernels.paged_attention.kernel import (
+        paged_attention_fwd, paged_attention_pool_fwd)
+    from repro.kernels.paged_attention.ref import (
+        paged_attention_pool_ref, paged_attention_ref)
+    rng = np.random.default_rng(7)
+    b, h, kv, d, page, p_max, e = 4, 4, 2, 8, 4, 5, 24
+    pool_k = jnp.asarray(rng.normal(size=(e, page, kv, d)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(e, page, kv, d)), jnp.float32)
+    table = rng.permutation(e - 1)[: b * p_max].reshape(b, p_max) + 1
+    lengths = np.array([1, 7, 13, 20], np.int32)
+    for i in range(b):                              # holes past the length
+        for p in range((lengths[i] + page - 1) // page, p_max):
+            table[i, p] = -1
+    table[3, 1] = -1                                # a hole BELOW the length
+    table = jnp.asarray(table, jnp.int32)
+    lengths = jnp.asarray(lengths)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    for window in (0, 3):
+        for cap in (0.0, 5.0):
+            out_k = paged_attention_fwd(q, pool_k, pool_v, table, lengths,
+                                        window=window, logit_cap=cap,
+                                        interpret=True)
+            out_r = paged_attention_ref(q, pool_k, pool_v, table, lengths,
+                                        window=window, logit_cap=cap)
+            np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                       atol=1e-5, rtol=1e-5)
+    # pooled variant: K/V as two planes of ONE engine extent pool
+    pool = jnp.asarray(rng.normal(size=(e, page, 4, kv, d)), jnp.float32)
+    for kp, vp in ((0, 1), (2, 3)):
+        out_k = paged_attention_pool_fwd(q, pool, table, lengths, k_plane=kp,
+                                         v_plane=vp, interpret=True)
+        out_r = paged_attention_pool_ref(q, pool, table, lengths, k_plane=kp,
+                                         v_plane=vp)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(out_r),
+            np.asarray(paged_attention_ref(q, pool[:, :, kp], pool[:, :, vp],
+                                           table, lengths)),
+            atol=1e-6, rtol=1e-6)
+
+
+def test_clone_inherits_page_rev_on_serving_route():
+    """PR 8 fix check: the ``VolumeManager.clone`` route serving uses must
+    inherit the source volume's page_rev watermark row (PR 5 fixed the
+    ring/transport route) — otherwise a forked session rebuilt after a
+    replica failure serves a stale prefix."""
+    from repro.core.blockdev import VolumeManager
+    with VolumeManager(backend="sharded", n_shards=2, n_replicas=2,
+                       payload_elems=8, page_blocks=4, n_extents=64,
+                       max_volumes=8, max_pages=8) as mgr:
+        vol = mgr.create()
+        data = bytes(range(32))                     # one full page
+        vol.write(0, data)
+        clone = vol.clone()
+        assert clone is not None
+        shard = vol.vid % 2
+        assert clone.vid % 2 == shard               # clone stays shard-local
+        revs = np.asarray(jax.device_get(
+            mgr.engine.backend.device_page_revs()))  # (R, S, V, P)
+        src_l, cl_l = vol.vid // 2, clone.vid // 2
+        assert revs[0, shard, src_l].max() > 0
+        np.testing.assert_array_equal(revs[:, shard, cl_l],
+                                      revs[:, shard, src_l])
+        # the failure-mode it protects: rebuild a replica, then force reads
+        # from it — the clone's prefix must come back fresh
+        mgr.flush()
+        mgr.engine.control("fail", shard=shard, replica=0)
+        clone.write(32, b"\xff" * 8)                # diverge while degraded
+        mgr.engine.control("rebuild", shard=shard, replica=0)
+        mgr.engine.control("fail", shard=shard, replica=1)
+        assert clone.read(0, 32) == data
+        assert clone.read(32, 8) == b"\xff" * 8
+        mgr.engine.control("rebuild", shard=shard, replica=1)
+
+
+def test_serving_zero_copy_replica_failure_mid_decode(small_model):
+    """Chaos-compatibility of the zero-copy KV store: failing a replica
+    mid-decode must not corrupt any session (tokens and logits stay
+    identical to an undisturbed engine), and rebuild restores mirroring."""
+    cfg, params = small_model
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=(7,))
+    engines = []
+    for _ in range(2):
+        e = ServeEngine(cfg, params, n_slots=2, max_len=64,
+                        record_logits=True)
+        e.submit(GenRequest(req_id=0, prompt=prompt.copy(), max_new=10))
+        engines.append(e)
+    eng, ref = engines
+    for _ in range(3):
+        eng.step()
+        ref.step()
+    eng.control("fail", replica=1)                  # mid-decode failure
+    for e in engines:
+        while not e.live[0].done:
+            e.step()
+    assert eng.live[0].out_tokens == ref.live[0].out_tokens
+    np.testing.assert_array_equal(np.stack(eng.live[0].logit_trace),
+                                  np.stack(ref.live[0].logit_trace))
+    eng.control("rebuild", replica=1)
+    assert eng.volumes.engine.backend.consistent()
+
+
 def test_serve_pool_shards_and_completes(small_model):
     """ServePool: requests hash across S ServeEngine shards, all complete,
     forks stay on the parent's shard, per-shard DBS state stays leak-free."""
