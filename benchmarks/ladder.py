@@ -745,6 +745,105 @@ def run_serve(*, smoke: bool = False, n_sessions: int = 16, max_new: int = 8,
                      "cost_ratio": cost_long / max(cost_short, 1e-9)}}
 
 
+def _np_checksum(buf: bytes, page_bytes: int) -> int:
+    """Vectorized-numpy host checksum over read-back bytes — the strongest
+    practical read-back-and-compute baseline (same spec as the in-band
+    ``checksum`` storage function; repro/compute/functions.py)."""
+    a = (np.frombuffer(buf, np.uint8).astype(np.uint32)
+         .reshape(-1, page_bytes) + np.uint32(1))
+    j = np.arange(page_bytes, dtype=np.uint32) % np.uint32(31)
+    rot = (a << j) | (a >> ((np.uint32(32) - j) % np.uint32(32)))
+    psums = np.bitwise_xor.reduce(rot, axis=1)
+    p = np.arange(psums.shape[0], dtype=np.uint32) % np.uint32(31)
+    rot2 = (psums << p) | (psums >> ((np.uint32(32) - p) % np.uint32(32)))
+    total = int(np.bitwise_xor.reduce(rot2))
+    return total - (1 << 32) if total >= (1 << 31) else total
+
+
+def run_compute(*, payload_elems: int = 64, pages: int = 256,
+                n_volumes: int = 4, n_shards: int = 4, repeats: int = 1,
+                **_ignored) -> Dict[str, Any]:
+    """Computational storage (ISSUE 9): the in-band volume scan — ONE
+    ``COMPUTE`` SQE running the ``checksum`` storage function inside the
+    ring step — against the read-back baseline: ``pread`` the full volume
+    through the same API (full SQE fan-out) and checksum the bytes on the
+    host with vectorized numpy. Both sides run on the SAME manager and
+    data, interleaved best-of-``repeats``; both results are checked
+    bit-identical to the registry entry's pure-Python mirror. Lands in
+    BENCH json under ``compute``; ``check_compute_gate`` pins in-band to
+    >= 2x read-back and bit-identity."""
+    from repro.compute import make_storage_fn
+
+    nv = min(n_volumes, 4)                  # full-capacity reads are the
+    mgr = VolumeManager(backend="ring", n_shards=n_shards,  # baseline cost
+                        payload_elems=payload_elems, max_pages=pages,
+                        n_extents=4 * pages * nv, max_volumes=16)
+    vols = [mgr.create() for _ in range(nv)]
+    cap, pby = mgr.capacity, mgr.page_bytes
+    blobs = {}
+    for k, v in enumerate(vols):
+        blobs[v.vid] = bytes((k * 37 + i * 11) % 251 for i in range(cap))
+        v.write(0, blobs[v.vid])
+    mgr.flush()
+    entry = make_storage_fn("checksum")
+    expected = {v.vid: entry.mirror(bytearray(blobs[v.vid]), pby,
+                                    mgr.block_bytes, 0, cap // pby, 0,
+                                    None)[0]
+                for v in vols}
+
+    def in_band_round():
+        t0 = time.perf_counter()
+        futs = [(v.vid, v.compute("checksum")) for v in vols]
+        mgr.flush()
+        vals = {vid: f.result().value for vid, f in futs}
+        return time.perf_counter() - t0, vals
+
+    def read_back_round():
+        t0 = time.perf_counter()
+        futs = [(v.vid, v.pread(0, cap)) for v in vols]
+        mgr.flush()
+        vals = {vid: _np_checksum(f.result(), pby) for vid, f in futs}
+        return time.perf_counter() - t0, vals
+
+    # warm both program shapes outside the clock
+    in_band_round(), read_back_round()
+    identical = True
+    t_in = t_back = float("inf")
+    for _ in range(max(repeats, 3)):        # interleaved best-of
+        dt, vals = in_band_round()
+        t_in = min(t_in, dt)
+        identical &= vals == expected
+        dt, vals = read_back_round()
+        t_back = min(t_back, dt)
+        identical &= vals == expected
+    scanned = nv * cap
+    return {"volumes": nv, "capacity_bytes": cap,
+            "in_band_scans_per_s": nv / t_in,
+            "read_back_scans_per_s": nv / t_back,
+            "in_band_bytes_per_s": scanned / t_in,
+            "read_back_bytes_per_s": scanned / t_back,
+            "speedup": t_back / t_in, "identical": identical}
+
+
+def check_compute_gate(compute: Dict[str, Any],
+                       floor: float = 2.0) -> List[str]:
+    """The computational-storage gate (ISSUE 9 acceptance): the in-band
+    volume scan must be bit-identical to the host reference AND hold
+    >= ``floor``x the read-back-and-compute-on-host baseline — pushing the
+    function to the data is only worth an opcode if it beats shipping the
+    bytes."""
+    problems = []
+    if not compute["identical"]:
+        problems.append("compute: in-band/read-back checksum NOT "
+                        "bit-identical to the host reference mirror")
+    ib, rb = compute["in_band_bytes_per_s"], compute["read_back_bytes_per_s"]
+    if ib < rb * floor:
+        problems.append(
+            f"compute: in-band volume scan {ib:.3g} B/s < {floor:g}x "
+            f"read-back baseline ({rb:.3g} B/s)")
+    return problems
+
+
 def check_serve_gate(serve: Dict[str, Any], floor: float = 1.0,
                      fork_flat: float = 4.0) -> List[str]:
     """PR 8 acceptance: zero-copy serving holds >= ``floor``x the
@@ -839,11 +938,11 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections to run "
                          "(ladder,mixed,blockdev,replication,trace,"
-                         "kernels,serve); default runs everything")
+                         "kernels,serve,compute); default runs everything")
     args = ap.parse_args(argv)
 
     sections = ("ladder", "mixed", "blockdev", "replication", "trace",
-                "kernels", "serve")
+                "kernels", "serve", "compute")
     if args.only is None:
         want = set(sections)
     else:
@@ -863,6 +962,7 @@ def main(argv=None) -> int:
     trace = run_trace(smoke=bool(args.smoke)) if "trace" in want else None
     kernels = run_kernels(**kw) if "kernels" in want else None
     serve = run_serve(smoke=bool(args.smoke), **kw) if "serve" in want else None
+    compute = run_compute(**kw) if "compute" in want else None
 
     if ladder is not None:
         width = max(len(c) for c in COLUMNS) + 2
@@ -914,6 +1014,13 @@ def main(argv=None) -> int:
               f"/p99={serve['copy_based']['token_wall_s']['p99']:.4f}s  "
               f"fork x{serve['fork']['ctx_ratio']:.0f}ctx cost ratio "
               f"{serve['fork']['cost_ratio']:.2f}")
+    if compute is not None:
+        print("computational storage (in-band checksum volume scan vs "
+              "read-back + host numpy): in-band "
+              f"{compute['in_band_bytes_per_s']:.3g} B/s vs read-back "
+              f"{compute['read_back_bytes_per_s']:.3g} B/s "
+              f"(x{compute['speedup']:.1f}); bit-identical to the mirror: "
+              f"{compute['identical']}")
 
     if args.out:
         doc = {"bench": "ladder", "kind": args.kind,
@@ -922,7 +1029,7 @@ def main(argv=None) -> int:
         for key, val in (("ops_per_s", ladder), ("mixed_control", mixed),
                          ("blockdev", blockdev), ("replication", replication),
                          ("trace", trace), ("kernels", kernels),
-                         ("serve", serve)):
+                         ("serve", serve), ("compute", compute)):
             if val is not None:
                 doc[key] = val
         with open(args.out, "w") as f:
@@ -945,6 +1052,8 @@ def main(argv=None) -> int:
             problems += check_kernel_gate(kernels)
         if serve is not None:
             problems += check_serve_gate(serve)
+        if compute is not None:
+            problems += check_compute_gate(compute)
         if problems:
             print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
             return 1
@@ -955,8 +1064,10 @@ def main(argv=None) -> int:
               "local/all path holds 0.9x the +dbs column on pure data, "
               "the chaos harness is oracle-clean, replay-deterministic and "
               "inside its straggler tail bounds, every registered DBS "
-              "kernel is bit-identical to the xla reference, and zero-copy "
-              "serving holds the copy-based floor with O(1) fork "
+              "kernel is bit-identical to the xla reference, zero-copy "
+              "serving holds the copy-based floor with O(1) fork, and the "
+              "in-band volume scan is bit-identical to the host reference "
+              "at >= 2x the read-back baseline "
               "(sections gated by --only run their checks only)")
     return 0
 

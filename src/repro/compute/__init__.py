@@ -1,0 +1,14 @@
+"""Computational storage: in-band storage functions (PAPERS.md,
+BPF-for-storage). A COMPUTE SQE names a registered storage function by id;
+the engine runs it against the device-resident extent pool inside the same
+jitted step as data and control — one SQE replaces reading every page
+across the host boundary. See registry.py for the registry contract,
+functions.py for the five built-ins, phase.py for the ring step's compute
+phase, exec.py for the host-oracle / eager device executors, and
+``Volume.compute`` (core/blockdev.py) for the public byte-level surface.
+"""
+from repro.compute.registry import (ST_MISMATCH, StorageFn,  # noqa: F401
+                                    available_storage_fns, make_storage_fn,
+                                    register_storage_fn, registry_version,
+                                    storage_fn_id)
+from repro.compute import functions  # noqa: F401  (registers the built-ins)

@@ -1,0 +1,139 @@
+"""Per-call storage-function executors for the non-ring backends.
+
+The ring backend runs storage functions *in-band* (a COMPUTE SQE through
+``phase.apply_compute_ops`` inside the jitted ring step). The other
+backends get the same results through two eager paths:
+
+- **host oracle** (``backend="host"``): ``host_compute`` runs the entry's
+  *sequential* ``host_ref`` against the backend's state/pool — the
+  bit-exact reference every other backend is gated against. The host
+  backend executes it from its FIFO queue (core/backends.py pump), so
+  ordering semantics match the ring exactly.
+- **device backends** (fused / sharded / slots / loop): ``device_compute``
+  flushes nothing itself (callers flush), slices the replica plane out of
+  the engine's storage group, and runs one jitted program — the entry's
+  device ``apply`` on the first healthy replica's hole-masked volume view,
+  plus the mirrored CoW commit for writing functions (compare_and_write)
+  through the configured registry kernel.
+
+Both return host scalars; the blockdev layer wraps them in ComputeResult.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compute.phase import volume_content
+from repro.compute.registry import make_storage_fn
+from repro.core import dbs
+from repro.core.transport import stamp_page_rev
+from repro.kernels.dbs.registry import make_kernel
+
+
+def host_compute(state, pool, req, payload_shape):
+    """Run ``req`` (a compute Request) sequentially against the host
+    backend's single-replica plane. Returns
+    ``(value, status, out, state', pool')``."""
+    entry = make_storage_fn(req.fn)
+    pay = (jnp.asarray(req.payload, jnp.float32).reshape(payload_shape)
+           if req.payload is not None
+           else jnp.zeros(tuple(payload_shape), jnp.float32))
+    content = volume_content(state, pool, jnp.int32(req.volume))
+    val, stt, out, do_w = entry.host_ref(content, jnp.int32(req.page),
+                                         jnp.int32(req.block),
+                                         jnp.int32(req.arg), pay)
+    if bool(do_w):
+        state, wops = dbs.write_pages(
+            state, jnp.int32(req.volume), jnp.asarray([req.page], jnp.int32),
+            jnp.asarray([jnp.uint32(1) << req.block], jnp.uint32),
+            jnp.asarray([True]))
+        pool = dbs.apply_write_ops(pool, wops, pay[None],
+                                   jnp.asarray([req.block], jnp.int32))
+    return int(val), int(stt), np.asarray(out), state, pool
+
+
+@partial(jax.jit, static_argnames=("fn_name", "kernel"))
+def _exec_replicated(states, pools, page_revs, vol, page, block, arg,
+                     payload, *, fn_name: str, kernel: str):
+    """One storage-function call against a healthy replica tuple: apply on
+    the first replica's volume view, mirrored CoW commit on all of them."""
+    entry = make_storage_fn(fn_name)
+    content = volume_content(states[0], pools[0], vol)
+    val, stt, out, do_w = entry.apply(content, page, block, arg, payload)
+    vol1, page1 = vol[None], page[None]
+    bits1 = (jnp.uint32(1) << jnp.clip(block, 0, 31).astype(jnp.uint32))[None]
+    wmask = do_w[None]
+    kern = make_kernel(kernel)
+    n_states, n_pools, n_prs = [], [], []
+    for st, pool, pr in zip(states, pools, page_revs):
+        st2, wops = dbs.write_pages(st, vol1, page1, bits1, wmask)
+        n_pools.append(kern.write(pool, wops, payload[None], block[None]))
+        n_prs.append(stamp_page_rev(pr, vol1, page1, wops.ok, st2.revision))
+        n_states.append(st2)
+    return (val.astype(jnp.int32), stt.astype(jnp.int32), out,
+            tuple(n_states), tuple(n_pools), tuple(n_prs))
+
+
+def device_compute(engine, vid: int, fn_name: str, page: int, block: int,
+                   arg: int, payload) -> Tuple[int, int, np.ndarray]:
+    """Execute one storage-function call against a flushed device backend
+    (fused / sharded / slots / loop). ``vid`` is the global volume id."""
+    cfg = engine.cfg
+    if cfg.null_backend or cfg.null_storage:
+        raise ValueError("storage functions need a real DBS data plane "
+                         "(null_backend/null_storage hold no bytes)")
+    storage = getattr(engine, "backend", None)
+    if storage is None or not hasattr(storage, "device_state"):
+        raise ValueError(
+            f"backend comm={cfg.comm!r} storage={cfg.storage!r} cannot "
+            "execute storage functions (no DBS replica plane)")
+    entry = make_storage_fn(fn_name)
+    kernel = getattr(engine, "_kernel", None) or "xla"
+    pay = (jnp.asarray(payload, jnp.float32).reshape(cfg.payload_shape)
+           if payload is not None
+           else jnp.zeros(tuple(cfg.payload_shape), jnp.float32))
+
+    if hasattr(storage, "states"):               # ShardedReplicaGroup
+        n_sh = storage.n_shards
+        shard, local = vid % n_sh, vid // n_sh
+        states, pools, _h = storage.device_state()
+        prs = storage.device_page_revs()
+        hrow = np.asarray(storage.healthy[shard])
+        hidx = [r for r in range(storage.n_replicas) if hrow[r]]
+        if not hidx:
+            raise RuntimeError(f"shard {shard} has no healthy replica")
+        take = lambda t: jax.tree.map(lambda x: x[shard], t)
+        val, stt, out, st2, pool2, pr2 = _exec_replicated(
+            tuple(take(states[r]) for r in hidx),
+            tuple(pools[r][shard] for r in hidx),
+            tuple(prs[r][shard] for r in hidx),
+            jnp.int32(local), jnp.int32(page), jnp.int32(block),
+            jnp.int32(arg), pay, fn_name=fn_name, kernel=kernel)
+        if entry.writes:
+            states, pools, prs = list(states), list(pools), list(prs)
+            for j, r in enumerate(hidx):
+                states[r] = jax.tree.map(
+                    lambda full, new: full.at[shard].set(new),
+                    states[r], st2[j])
+                pools[r] = pools[r].at[shard].set(pool2[j])
+                prs[r] = prs[r].at[shard].set(pr2[j])
+            storage.set_device_state(tuple(states), tuple(pools))
+            storage.set_device_page_revs(tuple(prs))
+    else:                                        # ReplicaGroup
+        states, pools = storage.device_state()   # healthy replicas only
+        if not states:
+            raise RuntimeError("no healthy replica to compute against")
+        prs = storage.device_page_revs()
+        val, stt, out, st2, pool2, pr2 = _exec_replicated(
+            states, pools, prs, jnp.int32(vid), jnp.int32(page),
+            jnp.int32(block), jnp.int32(arg), pay,
+            fn_name=fn_name, kernel=kernel)
+        if entry.writes:
+            storage.set_device_state(st2, pool2)
+            storage.set_device_page_revs(pr2)
+    v, s, o = jax.device_get((val, stt, out))
+    return int(v), int(s), np.asarray(o)

@@ -1,0 +1,325 @@
+"""The five built-in storage functions.
+
+Every function exists three times (device ``apply``, sequential jnp
+``host_ref``, pure-Python ``mirror``) over one shared byte-level spec, so
+bit-identity across backends is a property of the spec, not luck:
+
+- a *byte* is ``int(lane) & 0xFF`` of a float32 payload lane (the blockdev
+  byte API stores one byte per lane);
+- the page checksum is a position-sensitive xor-fold
+  ``XOR_j rotl32(byte_j + 1, j % 31)`` (the ``+1`` makes runs of zeros at
+  different offsets distinguishable, the rotation makes it order-sensitive);
+- a range checksum folds page sums the same way:
+  ``XOR_p rotl32(pagesum_p, p % 31)`` over the addressed pages;
+- a block checksum is the page fold applied to one block's bytes;
+- the CQ ``value`` lane carries the uint32 result bit-cast to int32.
+
+XOR folds are associative/commutative, so the device may reduce in any
+order while ``host_ref`` folds strictly sequentially — same bits.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compute.registry import ST_MISMATCH, register_storage_fn
+
+# ---------------------------------------------------------------------------
+# shared jnp helpers
+# ---------------------------------------------------------------------------
+
+
+def _as_bytes_u32(lanes: jnp.ndarray) -> jnp.ndarray:
+    """float32 byte lanes (each holding 0..255) -> uint32 byte values."""
+    return lanes.astype(jnp.int32).astype(jnp.uint32) & jnp.uint32(0xFF)
+
+
+def _rotl32(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.asarray(s, jnp.uint32) % jnp.uint32(32)
+    # (32 - s) % 32 keeps the right-shift amount in [0, 31] at s == 0
+    return (x << s) | (x >> ((jnp.uint32(32) - s) % jnp.uint32(32)))
+
+
+def _xor_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    return jax.lax.reduce(x, jnp.uint32(0),
+                          lambda a, b: jnp.bitwise_xor(a, b),
+                          (axis % x.ndim,))
+
+
+def _fold_bytes(b: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Position-sensitive xor-fold along ``axis``: XOR_j rotl32(b_j+1, j%31)."""
+    axis = axis % b.ndim
+    j = jnp.arange(b.shape[axis], dtype=jnp.uint32) % jnp.uint32(31)
+    j = j.reshape((1,) * axis + (-1,) + (1,) * (b.ndim - axis - 1))
+    return _xor_reduce(_rotl32(b + jnp.uint32(1), j), axis)
+
+
+def _u32_to_i32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _in_range(P: int, page, count) -> jnp.ndarray:
+    p = jnp.arange(P, dtype=jnp.int32)
+    return (p >= page) & (p < page + count)
+
+
+def _byte_matrix(content: jnp.ndarray) -> jnp.ndarray:
+    """(P, page_blocks, *S) lanes -> (P, page_bytes) uint32 byte values."""
+    P = content.shape[0]
+    return _as_bytes_u32(content.reshape(P, -1))
+
+
+def _block_lanes(content: jnp.ndarray, page, block) -> jnp.ndarray:
+    """One block's lanes, index-clamped (callers validate addresses)."""
+    pg = jnp.clip(page, 0, content.shape[0] - 1)
+    bl = jnp.clip(block, 0, content.shape[1] - 1)
+    return content[pg, bl]
+
+
+def _zero(payload: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros_like(payload)
+
+
+_FALSE = lambda: jnp.asarray(False)
+_OK = lambda: jnp.int32(0)
+
+# ---------------------------------------------------------------------------
+# checksum — range fold (one SQE replaces reading every page back)
+# ---------------------------------------------------------------------------
+
+
+def _checksum_apply(content, page, block, arg, payload):
+    b = _byte_matrix(content)
+    P = content.shape[0]
+    psums = _fold_bytes(b, axis=1)                              # (P,) uint32
+    rot = _rotl32(psums, jnp.arange(P, dtype=jnp.uint32) % 31)
+    total = _xor_reduce(jnp.where(_in_range(P, page, block), rot,
+                                  jnp.uint32(0)), 0)
+    return _u32_to_i32(total), _OK(), _zero(payload), _FALSE()
+
+
+def _fold_bytes_seq(b: jnp.ndarray) -> jnp.ndarray:
+    """Strictly sequential fold of a 1-D uint32 byte vector."""
+    def body(j, acc):
+        return acc ^ _rotl32(b[j] + jnp.uint32(1),
+                             jnp.asarray(j, jnp.uint32) % 31)
+    return jax.lax.fori_loop(0, b.shape[0], body, jnp.uint32(0))
+
+
+def _checksum_ref(content, page, block, arg, payload):
+    b = _byte_matrix(content)
+    def body(p, acc):
+        ps = _rotl32(_fold_bytes_seq(b[p]), jnp.asarray(p, jnp.uint32) % 31)
+        hit = (p >= page) & (p < page + block)
+        return jnp.where(hit, acc ^ ps, acc)
+    total = jax.lax.fori_loop(0, content.shape[0], body, jnp.uint32(0))
+    return _u32_to_i32(total), _OK(), _zero(payload), _FALSE()
+
+# ---------------------------------------------------------------------------
+# scan_count — predicate match count (arg in 0..255: byte == arg;
+# arg < 0: byte != 0)
+# ---------------------------------------------------------------------------
+
+
+def _match(b: jnp.ndarray, arg) -> jnp.ndarray:
+    tgt = arg.astype(jnp.uint32) & jnp.uint32(0xFF)
+    return jnp.where(arg < 0, b != 0, b == tgt)
+
+
+def _scan_count_apply(content, page, block, arg, payload):
+    b = _byte_matrix(content)
+    m = _match(b, arg) & _in_range(content.shape[0], page, block)[:, None]
+    return m.astype(jnp.int32).sum(), _OK(), _zero(payload), _FALSE()
+
+
+def _scan_count_ref(content, page, block, arg, payload):
+    b = _byte_matrix(content)
+    def body(p, acc):
+        hit = (p >= page) & (p < page + block)
+        row = _match(b[p], arg).astype(jnp.int32).sum()
+        return acc + jnp.where(hit, row, 0)
+    n = jax.lax.fori_loop(0, content.shape[0], body, jnp.int32(0))
+    return n, _OK(), _zero(payload), _FALSE()
+
+# ---------------------------------------------------------------------------
+# filter_pages — matching page indices through the CQ payload lanes
+# (value = total match count; payload = first D ascending indices, -1 pad)
+# ---------------------------------------------------------------------------
+
+
+def _filter_pages_apply(content, page, block, arg, payload):
+    P = content.shape[0]
+    D = int(payload.size)
+    b = _byte_matrix(content)
+    hits = jnp.any(_match(b, arg), axis=1) & _in_range(P, page, block)
+    count = hits.astype(jnp.int32).sum()
+    idx = jnp.sort(jnp.where(hits, jnp.arange(P, dtype=jnp.int32), P))
+    if D <= P:
+        sel = idx[:D]
+    else:
+        sel = jnp.concatenate([idx, jnp.full((D - P,), P, jnp.int32)])
+    out = jnp.where(sel < P, sel, -1).astype(jnp.float32)
+    return count, _OK(), out.reshape(payload.shape), _FALSE()
+
+
+def _filter_pages_ref(content, page, block, arg, payload):
+    P = content.shape[0]
+    D = int(payload.size)
+    b = _byte_matrix(content)
+    lane = jnp.arange(D, dtype=jnp.int32)
+    def body(p, carry):
+        out, n = carry
+        hit = ((p >= page) & (p < page + block)
+               & jnp.any(_match(b[p], arg)))
+        place = hit & (n < D)
+        out = jnp.where(place & (lane == n), p, out)
+        return out, n + hit.astype(jnp.int32)
+    out, n = jax.lax.fori_loop(0, P, body,
+                               (jnp.full((D,), -1, jnp.int32), jnp.int32(0)))
+    return n, _OK(), out.astype(jnp.float32).reshape(payload.shape), _FALSE()
+
+# ---------------------------------------------------------------------------
+# compare_and_write — checksum-compare CAS riding the CoW write path:
+# arg is the expected *blocksum* of the current block; on match the SQE
+# payload is committed to the block (value always = actual blocksum)
+# ---------------------------------------------------------------------------
+
+
+def _cas_status(match) -> jnp.ndarray:
+    return jnp.where(match, 0, ST_MISMATCH).astype(jnp.int32)
+
+
+def _cas_apply(content, page, block, arg, payload):
+    bb = _as_bytes_u32(_block_lanes(content, page, block).reshape(-1))
+    bsum = _u32_to_i32(_fold_bytes(bb, 0))
+    match = bsum == arg
+    return bsum, _cas_status(match), _zero(payload), match
+
+
+def _cas_ref(content, page, block, arg, payload):
+    bb = _as_bytes_u32(_block_lanes(content, page, block).reshape(-1))
+    bsum = _u32_to_i32(_fold_bytes_seq(bb))
+    match = bsum == arg
+    return bsum, _cas_status(match), _zero(payload), match
+
+# ---------------------------------------------------------------------------
+# verify_on_read — read one block AND return its checksum-match status
+# (arg = expected blocksum; arg == 0 skips the check and just checksums)
+# ---------------------------------------------------------------------------
+
+
+def _verify_status(bsum, arg) -> jnp.ndarray:
+    return jnp.where((arg == 0) | (bsum == arg), 0,
+                     ST_MISMATCH).astype(jnp.int32)
+
+
+def _verify_apply(content, page, block, arg, payload):
+    blk = _block_lanes(content, page, block)
+    bb = _as_bytes_u32(blk.reshape(-1))
+    bsum = _u32_to_i32(_fold_bytes(bb, 0))
+    return bsum, _verify_status(bsum, arg), blk.reshape(payload.shape), _FALSE()
+
+
+def _verify_ref(content, page, block, arg, payload):
+    blk = _block_lanes(content, page, block)
+    bb = _as_bytes_u32(blk.reshape(-1))
+    bsum = _u32_to_i32(_fold_bytes_seq(bb))
+    return bsum, _verify_status(bsum, arg), blk.reshape(payload.shape), _FALSE()
+
+# ---------------------------------------------------------------------------
+# pure-Python mirrors over the byte-oracle shadow
+# ---------------------------------------------------------------------------
+
+
+def py_rotl32(x: int, s: int) -> int:
+    s %= 32
+    return ((x << s) | (x >> ((32 - s) % 32))) & 0xFFFFFFFF
+
+
+def py_fold(bs) -> int:
+    t = 0
+    for j, v in enumerate(bs):
+        t ^= py_rotl32((v + 1) & 0xFFFFFFFF, j % 31)
+    return t
+
+
+def py_i32(x: int) -> int:
+    x &= 0xFFFFFFFF
+    return x - (1 << 32) if x >= (1 << 31) else x
+
+
+def py_blocksum(data) -> int:
+    """int32 blocksum of a bytes-like block — build `compare_and_write` /
+    `verify_on_read` expectations from host-side bytes."""
+    return py_i32(py_fold(data))
+
+
+def _pages(shadow, page_bytes: int, page: int, count: int):
+    n_pages = len(shadow) // page_bytes
+    return range(max(page, 0), min(page + count, n_pages))
+
+
+def _py_match(v: int, arg: int) -> bool:
+    return v != 0 if arg < 0 else v == (arg & 0xFF)
+
+
+def _checksum_mirror(shadow, page_bytes, block_bytes, page, block, arg, data):
+    t = 0
+    for p in _pages(shadow, page_bytes, page, block):
+        ps = py_fold(shadow[p * page_bytes:(p + 1) * page_bytes])
+        t ^= py_rotl32(ps, p % 31)
+    return py_i32(t), 0, None
+
+
+def _scan_count_mirror(shadow, page_bytes, block_bytes, page, block, arg,
+                       data):
+    n = 0
+    for p in _pages(shadow, page_bytes, page, block):
+        seg = shadow[p * page_bytes:(p + 1) * page_bytes]
+        n += sum(1 for v in seg if _py_match(v, arg))
+    return n, 0, None
+
+
+def _filter_pages_mirror(shadow, page_bytes, block_bytes, page, block, arg,
+                         data):
+    hits = [p for p in _pages(shadow, page_bytes, page, block)
+            if any(_py_match(v, arg)
+                   for v in shadow[p * page_bytes:(p + 1) * page_bytes])]
+    # the CQ payload carries block_bytes lanes -> first block_bytes indices
+    return len(hits), 0, hits[:block_bytes]
+
+
+def _cas_mirror(shadow, page_bytes, block_bytes, page, block, arg, data):
+    off = page * page_bytes + block * block_bytes
+    bsum = py_i32(py_fold(shadow[off:off + block_bytes]))
+    if bsum == arg:
+        shadow[off:off + block_bytes] = data
+        return bsum, 0, None
+    return bsum, ST_MISMATCH, None
+
+
+def _verify_mirror(shadow, page_bytes, block_bytes, page, block, arg, data):
+    off = page * page_bytes + block * block_bytes
+    cur = bytes(shadow[off:off + block_bytes])
+    bsum = py_i32(py_fold(cur))
+    status = 0 if (arg == 0 or bsum == arg) else ST_MISMATCH
+    return bsum, status, cur
+
+# ---------------------------------------------------------------------------
+# registration (order defines the SQE fn-lane ids: checksum=0 .. verify=4)
+# ---------------------------------------------------------------------------
+
+register_storage_fn("checksum", apply=_checksum_apply,
+                    host_ref=_checksum_ref, mirror=_checksum_mirror)
+register_storage_fn("scan_count", apply=_scan_count_apply,
+                    host_ref=_scan_count_ref, mirror=_scan_count_mirror)
+register_storage_fn("filter_pages", apply=_filter_pages_apply,
+                    host_ref=_filter_pages_ref, mirror=_filter_pages_mirror)
+register_storage_fn("compare_and_write", apply=_cas_apply,
+                    host_ref=_cas_ref, mirror=_cas_mirror,
+                    writes=True, scope="block")
+register_storage_fn("verify_on_read", apply=_verify_apply,
+                    host_ref=_verify_ref, mirror=_verify_mirror,
+                    scope="block")

@@ -1,0 +1,142 @@
+"""The storage-function registry: named in-band compute offloads.
+
+Mirrors the backend (``core/backends.py``), transport (``core/transport.py``)
+and kernel (``kernels/dbs/registry.py``) registries: a name resolves to a
+:class:`StorageFn` record, ``available_storage_fns()`` lists what is known,
+unknown lookups and duplicate registrations raise the same uniform
+``ValueError`` shape as the other three registries.
+
+A storage function is a small *vmap-safe* jnp program executed inside the
+fused step against the extent pool — the computational-storage analogue of
+the paper's in-band control ops (BPF-for-storage, PAPERS.md): instead of
+reading every page across the host boundary and computing there, one COMPUTE
+SQE carries the function id + immediate argument down, the engine runs the
+function against the device-resident bytes, and the CQ value/payload lanes
+carry the (scalar, block-sized) result back up.
+
+Each entry has three synchronized implementations:
+
+``apply``     the device program: vmap-safe, traced into the ring step's
+              compute phase (and into the eager per-call executor for the
+              fused/sharded backends).
+``host_ref``  a pure-jnp *sequential* reference (``lax.fori_loop`` style,
+              no data-parallel folds) — the host-oracle backend runs this,
+              and bit-identity device-vs-host is the acceptance gate.
+``mirror``    a pure-Python function over the harness byte oracle's
+              ``bytearray`` shadow — what the chaos harness and the
+              hypothesis property suite check every result against.
+
+``apply`` / ``host_ref`` share one signature::
+
+    fn(content, page, block, arg, payload)
+        -> (value i32, status i32, out (*S,) f32, do_write bool)
+
+where ``content`` is the hole-masked ``(P, page_blocks, *S)`` float32 lane
+view of one volume (holes read as zeros, exactly like OP_READ), ``page`` /
+``block`` are the SQE address lanes (for ``scope="range"`` functions,
+``page`` is the first page and ``block`` the page *count*; for
+``scope="block"`` functions they address one block), ``arg`` is the int32
+immediate and ``payload`` the SQE payload lanes. A function with
+``writes=True`` may return ``do_write=True`` to commit ``payload`` to the
+addressed block through the normal CoW write path (compare-and-write).
+
+``mirror`` has signature ``mirror(shadow, page_bytes, block_bytes, page,
+block, arg, data) -> (value, status, aux)`` and mutates ``shadow`` in place
+when the device function would commit a write.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+# Protocol constant, mirrored from core/ring.py (which imports this package;
+# the compute package never imports ring): positive CQ status meaning "the
+# function ran but its predicate did not hold" (CAS expectation miss,
+# verify_on_read checksum mismatch). Unlike the negative ST_ERR family this
+# is NOT an I/O error — IOFuture.result() only raises on status < 0.
+ST_MISMATCH = 1
+
+_SCOPES = ("range", "block")
+
+
+@dataclass(frozen=True)
+class StorageFn:
+    """One registered storage function (see module docstring for contracts)."""
+    name: str
+    apply: Callable        # device program, vmap-safe
+    host_ref: Callable     # pure-jnp sequential reference (host oracle)
+    mirror: Callable       # pure-Python bytearray-shadow reference
+    writes: bool = False   # may commit a CoW write (closes the compute window)
+    scope: str = "range"   # "range": (page, count) span; "block": one block
+
+
+_REGISTRY: Dict[str, StorageFn] = {}
+_VERSION: int = 0  # bumped on every (re)registration — keys compiled programs
+
+
+def available_storage_fns() -> Tuple[str, ...]:
+    """Registered storage-function names, in registration (= fn id) order."""
+    return tuple(_REGISTRY)
+
+
+def _known() -> str:
+    return ", ".join(available_storage_fns()) or "<none>"
+
+
+def register_storage_fn(name: str, *, apply: Callable,
+                        host_ref: Optional[Callable] = None,
+                        mirror: Optional[Callable] = None,
+                        writes: bool = False, scope: str = "range",
+                        override: bool = False) -> StorageFn:
+    """Register ``name``. ``host_ref`` defaults to ``apply`` (fine when the
+    device program is already sequential-order-insensitive); ``mirror``
+    defaults to None (harness/property checking then skips the function).
+    Duplicate names raise unless ``override=True`` — same contract as the
+    backend/transport/kernel registries."""
+    global _VERSION
+    if scope not in _SCOPES:
+        raise ValueError(f"storage fn scope must be one of {_SCOPES}, "
+                         f"got {scope!r}")
+    if name in _REGISTRY and not override:
+        raise ValueError(f"duplicate storage function {name!r} (registered: "
+                         f"{_known()}); pass override=True to replace")
+    entry = StorageFn(name=name, apply=apply,
+                      host_ref=host_ref if host_ref is not None else apply,
+                      mirror=mirror, writes=writes, scope=scope)
+    _REGISTRY[name] = entry
+    _VERSION += 1
+    return entry
+
+
+def make_storage_fn(name: str) -> StorageFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown storage function {name!r} "
+                         f"(registered: {_known()})") from None
+
+
+def storage_fn_id(name: str) -> int:
+    """Stable small-int id staged into the SQE ``fn`` lane."""
+    make_storage_fn(name)  # uniform unknown-name error
+    return list(_REGISTRY).index(name)
+
+
+def fn_writes(fnid: int) -> bool:
+    """Whether the function behind ``fnid`` may commit a write (drain-time
+    batching rule: a writing compute closes the batch's compute window)."""
+    fns = list(_REGISTRY.values())
+    return fns[fnid].writes if 0 <= fnid < len(fns) else False
+
+
+def device_table() -> Tuple[StorageFn, ...]:
+    """Registration-ordered entries — the ``lax.switch`` branch table the
+    ring step's compute phase is traced against."""
+    return tuple(_REGISTRY.values())
+
+
+def registry_version() -> int:
+    """Monotonic registration counter. Compiled ring programs bake the
+    branch table in, so engines key their program cache on this and retrace
+    when a storage function is (re)registered after first compile."""
+    return _VERSION

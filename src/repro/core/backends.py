@@ -87,18 +87,24 @@ class Backend(Protocol):
 _REGISTRY: Dict[str, Callable[[Any], Any]] = {}
 
 
-def register_backend(name: str, factory: Optional[Callable] = None):
+def register_backend(name: str, factory: Optional[Callable] = None, *,
+                     override: bool = False):
     """Register ``factory(cfg) -> Backend`` under ``name``. Usable directly
     (``register_backend("slots", HostDispatchBackend)``) or as a decorator
-    (``@register_backend("mybackend")``). Re-registering a name replaces the
-    factory — downstream embedders can shadow a built-in."""
+    (``@register_backend("mybackend")``). Duplicate names raise (the uniform
+    registry contract — backends/transports/kernels/storage fns all match);
+    embedders that mean to shadow a built-in pass ``override=True``."""
+    def _put(f):
+        if name in _REGISTRY and not override:
+            raise ValueError(
+                f"duplicate backend {name!r} (registered: "
+                f"{', '.join(available_backends())}); pass override=True "
+                "to replace")
+        _REGISTRY[name] = f
+        return f
     if factory is None:
-        def deco(f):
-            _REGISTRY[name] = f
-            return f
-        return deco
-    _REGISTRY[name] = factory
-    return factory
+        return _put
+    return _put(factory)
 
 
 def available_backends() -> Tuple[str, ...]:
@@ -387,7 +393,7 @@ class HostStateBackend(ControlDispatch):
     ``blockdev.VolumeManager``)."""
 
     is_pool = False
-    data_kinds = frozenset({"read", "write"})
+    data_kinds = frozenset({"read", "write", "compute"})
 
     def __init__(self, cfg):
         self.cfg = cfg
@@ -410,7 +416,7 @@ class HostStateBackend(ControlDispatch):
         if req.kind not in self.data_kinds:
             raise ValueError(
                 f"kind={req.kind!r} requests need backend='ring'; the host "
-                "oracle carries data ops only — use control()")
+                "oracle carries data and compute ops only — use control()")
         req.tick = self.step
         self.queue.append(req)
 
@@ -423,6 +429,7 @@ class HostStateBackend(ControlDispatch):
         if not self.queue:
             return 0
         r = self.queue.popleft()
+        status = 0
         if r.kind == "write":
             self.state, ops = dbs.write_pages(
                 self.state, jnp.int32(r.volume),
@@ -433,12 +440,20 @@ class HostStateBackend(ControlDispatch):
                 self.pool = dbs.apply_write_ops(
                     self.pool, ops, jnp.asarray(r.payload)[None],
                     jnp.asarray([r.block], jnp.int32))
+        elif r.kind == "compute":
+            # the sequential host_ref — the reference every in-program
+            # backend's storage-function results are gated against
+            if self.pool is not None:
+                from repro.compute.exec import host_compute
+                val, status, out, self.state, self.pool = host_compute(
+                    self.state, self.pool, r, self.cfg.payload_shape)
+                r.result = (val, out)
         elif self.pool is not None:
             ext = int(self.state.table[r.volume, r.page])
             r.result = (np.zeros(tuple(self.cfg.payload_shape), np.float32)
                         if ext < 0 else
                         np.asarray(self.pool[ext, r.block]))
-        r.status = 0
+        r.status = status
         r.latency = self.step - getattr(r, "tick", 0) + 1
         self.step += 1
         self.completed += 1

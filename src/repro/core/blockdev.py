@@ -64,6 +64,7 @@ in-flight I/O (including write-behind replica traffic) on exit, and
 from __future__ import annotations
 
 import itertools
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -129,13 +130,45 @@ class IOFuture:
             self._mgr.flush()
         if not self.done():
             raise RuntimeError("I/O did not complete after a full drain")
-        bad = [r for r in self._reqs if r.status != 0]
+        # negative statuses are I/O errors; positive ones (ST_MISMATCH from
+        # compare_and_write / verify_on_read) are op-level outcomes the
+        # caller inspects on the result — not exceptions
+        bad = [r for r in self._reqs if r.status < 0]
         if bad:
             raise OSError(f"{bad[0].kind} failed with status {bad[0].status} "
                           f"(volume {bad[0].volume}, page {bad[0].page})")
         self._cached = (self._assemble() if self._assemble is not None
                         else self._value)
         return self._cached
+
+
+@dataclass
+class ComputeResult:
+    """Outcome of one ``Volume.compute`` call.
+
+    ``value`` is the function's scalar result (checksum, match count,
+    actual blocksum for ``compare_and_write``...), ``status`` its op status
+    (0 = OK, ``ST_MISMATCH`` = compare/verify failed — a *result*, not an
+    I/O error), and ``payload`` the output lanes (matching pages for
+    ``filter_pages``, the block contents for ``verify_on_read``)."""
+    fn: str
+    value: int
+    status: int
+    payload: np.ndarray = field(repr=False)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == 0
+
+    def pages(self) -> List[int]:
+        """Decode the payload as a page list (``filter_pages``): the
+        non-negative lanes, in ascending order."""
+        return [int(v) for v in np.asarray(self.payload).reshape(-1)
+                if v >= 0]
+
+    def data(self) -> bytes:
+        """Decode the payload as block bytes (``verify_on_read``)."""
+        return _lanes_to_bytes(self.payload)
 
 
 class Volume:
@@ -157,6 +190,20 @@ class Volume:
 
     def flush(self) -> None:
         self.mgr.flush()
+
+    # -- computational storage ------------------------------------------------
+    def compute(self, fn: str, off: int = 0, nbytes: Optional[int] = None,
+                *, arg: int = 0, data: Optional[bytes] = None) -> IOFuture:
+        """Run a registered storage function **in-band** against this
+        volume's bytes (repro/compute). ``fn`` names a registry entry
+        (``available_storage_fns()``); range-scoped functions take a
+        page-aligned ``[off, off+nbytes)`` span (default: the whole
+        device), block-scoped ones a single block at ``off``. ``arg`` is
+        the function's scalar parameter, ``data`` the input block for
+        writing functions (``compare_and_write``'s new contents). Returns
+        an ``IOFuture`` resolving to a ``ComputeResult``."""
+        return self.mgr.compute(self.vid, fn, off, nbytes, arg=arg,
+                                data=data)
 
     # -- sync convenience wrappers -------------------------------------------
     def read(self, off: int, nbytes: int) -> bytes:
@@ -535,6 +582,82 @@ class VolumeManager:
             if b > a:
                 reqs.extend(self.pwrite(vid, a, b"\x00" * (b - a))._reqs)
         return IOFuture(self, reqs, value=nbytes)
+
+    # ------------------------------------------------- computational storage
+    def compute(self, vol, fn: str, off: int = 0,
+                nbytes: Optional[int] = None, *, arg: int = 0,
+                data: Optional[bytes] = None) -> IOFuture:
+        """In-band storage function over a volume's bytes (see
+        ``Volume.compute``). On backends whose submission path accepts
+        ``kind="compute"`` (the ring executes it inside the fused step; the
+        host oracle runs the sequential reference in its pump FIFO) this is
+        one async SQE riding the volume's queue — ordered like any other
+        request. Elsewhere (fused/sharded) it fences with a flush and runs
+        the same device computation against the replica pools
+        (repro.compute.exec.device_compute)."""
+        self._check_open()
+        from repro.compute import make_storage_fn, storage_fn_id
+        vid = self._vid(vol)
+        entry = make_storage_fn(fn)           # unknown names raise here
+        bb, pby = self.block_bytes, self.page_bytes
+        if entry.scope == "range":
+            if nbytes is None:
+                nbytes = self.capacity - off
+            if off % pby or nbytes % pby or nbytes <= 0:
+                raise ValueError(
+                    f"range-scoped {fn!r} needs a page-aligned non-empty "
+                    f"span (page_bytes={pby}), got [{off}, {off + nbytes})")
+            self._check_span(off, nbytes)
+            page, block = off // pby, nbytes // pby   # start page, page count
+        else:                                  # scope == "block"
+            if off % bb:
+                raise ValueError(f"block-scoped {fn!r} needs a block-aligned "
+                                 f"offset (block_bytes={bb}), got {off}")
+            if nbytes is None:
+                nbytes = bb
+            if nbytes != bb:
+                raise ValueError(f"block-scoped {fn!r} covers exactly one "
+                                 f"block ({bb}B), got nbytes={nbytes}")
+            self._check_span(off, nbytes)
+            ab = off // bb
+            page, block = ab // self.page_blocks, ab % self.page_blocks
+        payload = None
+        if entry.writes:
+            if data is None:
+                raise ValueError(f"{fn!r} writes: pass data= (the new "
+                                 "block contents)")
+            data = bytes(data)
+            if len(data) != bb:
+                raise ValueError(f"{fn!r} data must be one block "
+                                 f"({bb}B), got {len(data)}")
+            payload = _bytes_to_lanes(data)
+        elif data is not None:
+            raise ValueError(f"{fn!r} does not take data=")
+
+        def wrap(value, status, lanes) -> ComputeResult:
+            return ComputeResult(fn=fn, value=int(value), status=int(status),
+                                 payload=np.asarray(lanes, np.float32))
+
+        if "compute" in self.engine.data_kinds:    # ring + host: in-queue
+            r = Request(req_id=self._rid(vid), kind="compute", volume=vid,
+                        page=page, block=block, payload=payload, fn=fn,
+                        arg=int(arg), fnid=storage_fn_id(fn))
+            self._fast_submit(r)
+
+            def assemble() -> ComputeResult:
+                value, lanes = (r.result if r.result is not None
+                                else (0, np.zeros(self.payload_shape,
+                                                  np.float32)))
+                return wrap(value, r.status, lanes)
+            return IOFuture(self, [r], assemble=assemble)
+        # device backends without an in-band compute path: fence with a
+        # flush (ordering behind in-flight I/O), then run the very same
+        # device computation against the replica pools
+        from repro.compute.exec import device_compute
+        self.flush()
+        value, status, lanes = device_compute(
+            self.engine, vid, fn, page, block, int(arg), payload)
+        return IOFuture(self, [], value=wrap(value, status, lanes))
 
     # ------------------------------------- embedder control-plane passthrough
     @property

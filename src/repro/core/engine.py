@@ -63,6 +63,9 @@ class EngineConfig:
                                  # (pure-jnp row composition) | copy
                                  # (dbs_copy + XLA scatter hybrid)
     n_shards: int = 1            # engine shards for comm="sharded"/"ring"
+    compute_tail: int = 8        # max COMPUTE SQEs per ring batch (the
+                                 # in-program storage-function scan window,
+                                 # core/ring.py / compute/phase.py)
     transport: str = "local"     # controller<->replica wire (a REGISTERED
                                  # TRANSPORT, core/transport.py): local
                                  # (in-process) | device (stacked device

@@ -40,16 +40,23 @@ from repro.core.ring import KIND_CLASS, OP_WRITE, RingFrontend
 class Request:
     req_id: int
     kind: str                 # read | write | snapshot | clone | unmap |
-                              # delete | fail | rebuild | noop (ring opcodes)
+                              # delete | fail | rebuild | compute | noop
+                              # (ring opcodes)
     volume: int = -1
     page: int = 0
-    block: int = 0            # block offset; replica index for fail/rebuild
+    block: int = 0            # block offset; replica index for fail/rebuild;
+                              # page count (range fns) / block (block fns)
+                              # for compute
     payload: Any = None
     shard: Optional[int] = None  # explicit shard (fail/rebuild; else by vol)
     result: Any = None        # read payload / snapshot id / clone volume id
+                              # / (value, CQ payload lanes) for compute
     status: Any = None        # CQE status (ring.ST_*); 0 = completed OK
     latency: Any = None       # completion latency in pump ticks (ring path)
     tick: int = 0             # submission pump tick (stamped by the frontend)
+    fn: Optional[str] = None  # storage-function name (kind="compute")
+    arg: int = 0              # storage-function immediate argument
+    fnid: int = 0             # resolved registry id (stamped at submit)
 
 
 class UpstreamFrontend:
@@ -91,8 +98,8 @@ def _reject_control(req) -> None:
     """Legacy (data-only) frontends refuse control kinds at SUBMIT time:
     rejecting at drain would have already popped the whole batch — dropping
     innocent data requests alongside the offending one."""
-    if KIND_CLASS.get(req.kind) in ("vol", "repl"):
-        raise ValueError("control opcodes require comm='ring' "
+    if KIND_CLASS.get(req.kind) in ("vol", "repl", "compute"):
+        raise ValueError("control/compute opcodes require comm='ring' "
                          f"(got kind={req.kind!r} on a data-only frontend)")
 
 

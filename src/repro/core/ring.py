@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compute import registry as compute_registry
+from repro.compute.phase import apply_compute_ops
 from repro.core import dbs, slots
 from repro.core.control import ControlDispatch
 from repro.core.fused import _cow_apply, _rr_gather
@@ -70,23 +72,31 @@ OP_UNMAP = 5
 OP_DELETE = 6
 OP_FAIL = 7        # replica-control ops (close their batch)
 OP_REBUILD = 8
+OP_COMPUTE = 9     # in-band storage function (repro/compute registry)
 
 OP_NAMES = ("NOOP", "READ", "WRITE", "SNAPSHOT", "CLONE", "UNMAP", "DELETE",
-            "FAIL_REPLICA", "REBUILD_REPLICA")
+            "FAIL_REPLICA", "REBUILD_REPLICA", "COMPUTE")
 
 KIND_TO_OP = {"noop": OP_NOOP, "read": OP_READ, "write": OP_WRITE,
               "snapshot": OP_SNAPSHOT, "clone": OP_CLONE, "unmap": OP_UNMAP,
-              "delete": OP_DELETE, "fail": OP_FAIL, "rebuild": OP_REBUILD}
+              "delete": OP_DELETE, "fail": OP_FAIL, "rebuild": OP_REBUILD,
+              "compute": OP_COMPUTE}
 
 # opcode classes: which phases of the step a batch needs (static per program)
 KIND_CLASS = {"noop": "noop", "read": "read", "write": "write",
               "snapshot": "vol", "clone": "vol", "unmap": "vol",
-              "delete": "vol", "fail": "repl", "rebuild": "repl"}
+              "delete": "vol", "fail": "repl", "rebuild": "repl",
+              "compute": "compute"}
 
 ST_OK = 0          # completed
 ST_ERR = -1        # op rejected (bad volume / snapshot table full / bad arg)
 ST_LAST = -2       # FAIL would lose the shard's last healthy replica
 ST_HEALTHY = -3    # REBUILD target is healthy — nothing to rebuild
+# positive status: the op ran, its predicate did not hold (CAS expectation
+# miss, verify_on_read checksum mismatch) — NOT an I/O error, IOFuture only
+# raises on status < 0. Canonical value lives in repro/compute/registry.py
+# (this module imports the compute package; never the reverse).
+ST_MISMATCH = compute_registry.ST_MISMATCH
 
 # max control ops per batch: the in-program control scan covers a fixed
 # K-lane window (control lanes are contiguous — the drain policy admits only
@@ -94,6 +104,14 @@ ST_HEALTHY = -3    # REBUILD target is healthy — nothing to rebuild
 # first control lane sees them all). Small K keeps the scan cheap under
 # vmap, where every lane executes every switch branch.
 CTRL_TAIL = 8
+
+# max COMPUTE ops per batch — the compute phase's scan window, same idiom
+# (EngineConfig.compute_tail overrides per engine). Compute is its own batch
+# rank between data and control: data < compute < control, the drain cuts on
+# every rank change, and a *writing* storage function (compare_and_write)
+# additionally closes the compute window so the phase commits at most one
+# CoW write per batch.
+COMPUTE_TAIL = 8
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +133,8 @@ class SQE:
     payload: jnp.ndarray    # (B, *payload) write payloads
     queue: jnp.ndarray      # (B,) int32 admission queue
     tick: jnp.ndarray       # (B,) int32 submission pump tick
+    fn: jnp.ndarray         # (B,) int32 storage-fn id (COMPUTE lanes)
+    arg: jnp.ndarray        # (B,) int32 storage-fn immediate argument
     step: jnp.ndarray       # ()   int32 admission step (this pump's tick)
 
 
@@ -301,21 +321,22 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
                    page_revs: Tuple[jnp.ndarray, ...], batch: SQE,
                    rr: jnp.ndarray, healthy: jnp.ndarray, *,
                    classes: Tuple[str, ...], null_backend: bool = False,
-                   null_storage: bool = False, kernel: str = "pallas"):
+                   null_storage: bool = False, kernel: str = "pallas",
+                   compute_tail: int = COMPUTE_TAIL):
     """One ring iteration, un-jitted (vmap-safe over a leading shard axis).
 
     ``classes`` (static) names the opcode classes present in this batch
-    ("read" / "write" / "vol" / "repl" / "noop") — the host knows them at
-    drain time, so each signature compiles its own program and a pure-data
-    batch pays exactly the fused step's cost plus the CQE scatter.
-    ``page_revs`` are the per-replica last-write watermarks
+    ("read" / "write" / "compute" / "vol" / "repl" / "noop") — the host
+    knows them at drain time, so each signature compiles its own program
+    and a pure-data batch pays exactly the fused step's cost plus the CQE
+    scatter. ``page_revs`` are the per-replica last-write watermarks
     (``transport.stamp_page_rev``), stamped with the write phase and copied
     whole on in-band REBUILD. Returns
     ``(table', cq', states', pools', page_revs', healthy', CQEView)``.
     """
     table, ids, ok = slots.transact(table, batch.want, batch.volume,
                                     batch.queue, batch.step,
-                                    opcodes=batch.op)
+                                    opcodes=batch.op, fnids=batch.fn)
     b_n = batch.op.shape[0]
     status = jnp.zeros((b_n,), jnp.int32)
     value = jnp.full((b_n,), -1, jnp.int32)
@@ -345,6 +366,15 @@ def ring_step_core(table: slots.SlotTable, cq: CQ,
             reads = _rr_gather(states, pools, batch, rr,
                                ok & (batch.op == OP_READ), reads, healthy,
                                kernel)
+        if "compute" in classes and not null_storage:
+            # in-band storage functions: between data and control (the drain
+            # never mixes compute with control lanes, so this phase and the
+            # control tail are mutually exclusive per batch)
+            states, pools, page_revs, value, status, reads = (
+                apply_compute_ops(states, pools, page_revs, healthy, batch,
+                                  ok & (batch.op == OP_COMPUTE), value,
+                                  status, reads, kernel=kernel,
+                                  tail=compute_tail))
         if "vol" in classes:                     # lane-ordered control tail
             states, page_revs, value, status = _apply_vol_ops(
                 states, page_revs, batch, ok, value, status)
@@ -399,11 +429,13 @@ class RingFrontend:
     """
 
     def __init__(self, n_shards: int, n_queues: int, n_slots: int,
-                 batch: int = 64, with_table: bool = True):
+                 batch: int = 64, with_table: bool = True,
+                 compute_tail: int = COMPUTE_TAIL):
         self.n_shards = n_shards
         self.n_queues = n_queues
         self.n_slots = n_slots
         self.batch = batch
+        self.compute_tail = compute_tail
         self.queues: List[List[collections.deque]] = [
             [collections.deque() for _ in range(n_queues)]
             for _ in range(n_shards)]
@@ -420,6 +452,10 @@ class RingFrontend:
         if req.kind not in KIND_TO_OP:
             raise ValueError(f"unknown request kind {req.kind!r} "
                              f"(expected one of {sorted(KIND_TO_OP)})")
+        if req.kind == "compute":
+            # resolve name -> registry id at the submission boundary (the
+            # uniform unknown-name ValueError fires here, not at drain time)
+            req.fnid = compute_registry.storage_fn_id(req.fn)
         s = self.shard_of(req)
         req.tick = self.step[s]
         self.queues[s][req.req_id % self.n_queues].append(req)
@@ -444,9 +480,15 @@ class RingFrontend:
 
     def _drain_shard(self, s: int, limit: int) -> List[Any]:
         """Round-robin drain of one shard under the batch-ordering contract:
-        a data op after a drained control op stays queued for the next
-        batch; a replica-control op closes the batch; at most CTRL_TAIL
-        control ops per batch (the step's in-program scan window).
+        batch rank is data < compute < control, and the drain cuts on EVERY
+        rank change (so compute lanes are contiguous, follow all data lanes,
+        and never share a batch with control lanes — the step applies
+        data, then the compute window, then the control tail, in lane
+        order = submission order). A replica-control op closes the batch;
+        at most CTRL_TAIL control / ``compute_tail`` compute ops per batch
+        (the step's in-program scan windows), and a *writing* storage
+        function closes the compute window so the compute phase commits at
+        most one CoW write.
 
         The drain never exceeds ``n_slots``: with the transact lifecycle a
         pump starts with every slot free, so a batch that fits the slot
@@ -456,9 +498,13 @@ class RingFrontend:
         order)."""
         reqs: List[Any] = []
         ctrl_seen = False
+        comp_seen = False
+        comp_closed = False
         n_ctrl = 0
+        n_comp = 0
         limit = min(limit, self.n_slots)
         tail = min(CTRL_TAIL, limit)
+        ctail = min(self.compute_tail, limit)
         qs = [q for q in self.queues[s] if q]
         while qs and len(reqs) < limit:
             for q in list(qs):
@@ -467,9 +513,15 @@ class RingFrontend:
                     continue
                 k = KIND_CLASS[q[0].kind]
                 if ctrl_seen and k not in ("vol", "repl"):
-                    return reqs                  # data after control: cut
+                    return reqs                  # rank downgrade: cut
+                if comp_seen and k not in ("compute", "vol", "repl"):
+                    return reqs                  # data after compute: cut
+                if comp_seen and k in ("vol", "repl"):
+                    return reqs                  # compute never joins control
                 if k in ("vol", "repl") and n_ctrl >= tail:
                     return reqs                  # control window full
+                if k == "compute" and (comp_closed or n_comp >= ctail):
+                    return reqs                  # compute window closed/full
                 r = q.popleft()
                 # provisional latency in pump ticks, stamped at drain (the
                 # unified semantics across every comm mode — requeued lanes
@@ -480,6 +532,11 @@ class RingFrontend:
                 if k in ("vol", "repl"):
                     ctrl_seen = True
                     n_ctrl += 1
+                if k == "compute":
+                    comp_seen = True
+                    n_comp += 1
+                    if compute_registry.fn_writes(getattr(r, "fnid", 0)):
+                        comp_closed = True
                 if k == "repl" or len(reqs) >= limit:
                     return reqs
         return reqs
@@ -497,7 +554,8 @@ class RingFrontend:
                  "payload": np.zeros((s_n, b_n) + tuple(payload_shape),
                                      np.float32),
                  "step": np.zeros((s_n,), np.int32)}
-        for k in ("op", "volume", "page", "block", "queue", "tick"):
+        for k in ("op", "volume", "page", "block", "queue", "tick", "fn",
+                  "arg"):
             stage[k] = np.zeros((s_n, b_n), np.int32)
         classes: Set[str] = set()
         for s, reqs in enumerate(drained):
@@ -514,6 +572,8 @@ class RingFrontend:
                 stage["block"][s, i] = r.block
                 stage["queue"][s, i] = r.req_id % self.n_queues
                 stage["tick"][s, i] = getattr(r, "tick", 0)
+                stage["fn"][s, i] = getattr(r, "fnid", 0)
+                stage["arg"][s, i] = getattr(r, "arg", 0)
                 if r.payload is not None:
                     stage["payload"][s, i] = np.asarray(r.payload)
         return drained, stage, classes
@@ -531,6 +591,7 @@ class RingFrontend:
                   payload=jnp.asarray(st["payload"]),
                   queue=jnp.asarray(st["queue"]),
                   tick=jnp.asarray(st["tick"]),
+                  fn=jnp.asarray(st["fn"]), arg=jnp.asarray(st["arg"]),
                   step=jnp.asarray(st["step"]))
         return drained, sqe, classes
 
@@ -571,7 +632,9 @@ class RingEngine(ControlDispatch):
             raise ValueError(f"n_shards must be >= 1, got {s}")
         self.cfg = cfg
         self.n_shards = s
-        self.frontend = RingFrontend(s, cfg.n_queues, cfg.n_slots, cfg.batch)
+        self._compute_tail = getattr(cfg, "compute_tail", COMPUTE_TAIL)
+        self.frontend = RingFrontend(s, cfg.n_queues, cfg.n_slots, cfg.batch,
+                                     compute_tail=self._compute_tail)
         if cfg.null_backend:
             self.backend = None
         else:
@@ -597,29 +660,47 @@ class RingEngine(ControlDispatch):
     @staticmethod
     def _canon(classes: Set[str]) -> Tuple[str, ...]:
         """Canonical program signature for a drained batch. Each tier
-        includes the cheaper ones (masked lanes are inert), so at most FOUR
-        programs exist per batch geometry — a mixed workload can't trace a
-        program per opcode combination, and heavyweight machinery (the
-        control-tail scan, the rebuild pool copy) is only in the programs
-        that need it."""
+        includes the cheaper ones (masked lanes are inert), so at most
+        SEVEN programs exist per batch geometry — a mixed workload can't
+        trace a program per opcode combination, and heavyweight machinery
+        (the control-tail scan, the rebuild pool copy, the storage-function
+        switch) is only in the programs that need it. Compute gets its OWN
+        tier (the drain never mixes compute with control lanes *within a
+        shard*), so the control programs never pay for the full-volume
+        content gather — but ``classes`` merges across shards, and one
+        pump can drain control on shard 0 while shard 1 drains computes,
+        so the control tiers gain compute-including variants for exactly
+        that cross-shard mix."""
         if "repl" in classes:
-            return ("read", "repl", "vol", "write")
-        if "vol" in classes:
-            return ("read", "vol", "write")
-        if "write" in classes:
+            base = ("read", "repl", "vol", "write")
+        elif "vol" in classes:
+            base = ("read", "vol", "write")
+        elif "compute" in classes:
+            return ("compute", "read", "write")
+        elif "write" in classes:
             return ("read", "write")
-        return ("read",)
+        else:
+            return ("read",)
+        if "compute" in classes:
+            return ("compute",) + base
+        return base
 
     def _get_step(self, classes: Set[str]):
         key = self._canon(classes)
-        if key in self._steps:
-            return self._steps[key], key
-        self.trace_counts.setdefault(key, 0)
+        cache_key = key
+        if "compute" in key:
+            # compute programs bake the registry's branch table in: a
+            # storage fn registered after first compile must retrace
+            cache_key = key + (f"sfns:{compute_registry.registry_version()}",)
+        if cache_key in self._steps:
+            return self._steps[cache_key], key
+        self.trace_counts.setdefault(cache_key, 0)
         read_only = key == ("read",)
         core = partial(ring_step_core, classes=key,
                        null_backend=self.cfg.null_backend,
                        null_storage=self.cfg.null_storage,
-                       kernel=self._kernel)
+                       kernel=self._kernel,
+                       compute_tail=self._compute_tail)
         mapped = vmap_shards(core, self.n_shards)
 
         if read_only:
@@ -629,7 +710,7 @@ class RingEngine(ControlDispatch):
             # round-trip.
             def stepped(table, cq, states, pools, page_revs, batch, rr,
                         healthy):
-                self.trace_counts[key] += 1
+                self.trace_counts[cache_key] += 1
                 table, cq, _, _, _, _, view = mapped(
                     table, cq, states, pools, page_revs, batch, rr, healthy)
                 return table, cq, view
@@ -637,11 +718,11 @@ class RingEngine(ControlDispatch):
         else:
             def stepped(table, cq, states, pools, page_revs, batch, rr,
                         healthy):
-                self.trace_counts[key] += 1
+                self.trace_counts[cache_key] += 1
                 return mapped(table, cq, states, pools, page_revs, batch,
                               rr, healthy)
             fn = jax.jit(stepped, donate_argnums=(0, 1, 2, 3, 4))
-        self._steps[key] = fn
+        self._steps[cache_key] = fn
         return fn, key
 
     # ------------------------------------------------------------ volumes
@@ -805,6 +886,9 @@ class RingEngine(ControlDispatch):
                     local = int(value[s][i])
                     r.result = (local * self.n_shards + s if local >= 0
                                 else -1)
+                elif r.kind == "compute":
+                    # (scalar result, CQ payload lanes) — blockdev wraps it
+                    r.result = (int(value[s][i]), reads[s, i])
                 done += 1
         self.frontend.requeue_all(requeues)
         self.completed += done

@@ -96,6 +96,7 @@ class SlotTable:
     queue: jnp.ndarray       # (N,) int32 — admission queue the request used
     arrival: jnp.ndarray     # (N,) int32 — admission step (for fairness)
     opcode: jnp.ndarray      # (N,) int32 — ring opcode of the slot's request
+    fnid: jnp.ndarray        # (N,) int32 — storage-fn id (COMPUTE slots)
     status: jnp.ndarray      # (N,) int32 — completion status (CQ mirror)
 
 
@@ -106,7 +107,7 @@ def make_table(n_slots: int) -> SlotTable:
     z = lambda: jnp.zeros((n_slots,), jnp.int32)
     return SlotTable(ring=make_ring(n_slots), active=jnp.zeros((n_slots,), bool),
                      seq_len=z(), volume=z() - 1, queue=z(), arrival=z(),
-                     opcode=z(), status=z())
+                     opcode=z(), fnid=z(), status=z())
 
 
 def make_sharded_table(n_shards: int, n_slots: int) -> SlotTable:
@@ -120,12 +121,14 @@ def make_sharded_table(n_shards: int, n_slots: int) -> SlotTable:
 
 
 def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
-          queues: jnp.ndarray, step: jnp.ndarray, opcodes=None):
+          queues: jnp.ndarray, step: jnp.ndarray, opcodes=None, fnids=None):
     """Admit up to len(want) requests. Returns (table', slot_ids, ok).
 
     ``opcodes`` (optional (k,) int32) records the ring opcode of each lane
     in the Messages Array — the SQ half of the SQ/CQ protocol
-    (core/ring.py); omitted lanes record 0 (OP_NOOP).
+    (core/ring.py); omitted lanes record 0 (OP_NOOP). ``fnids`` (optional
+    (k,) int32) records the storage-function id of COMPUTE lanes
+    (repro/compute registry); omitted lanes record 0.
     """
     ring, ids, ok = acquire(table.ring, want.shape[0], want)
     # not-admitted lanes scatter out of bounds and are dropped: clamping them
@@ -142,6 +145,7 @@ def admit(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
         queue=upd(table.queue, queues),
         arrival=upd(table.arrival, jnp.broadcast_to(step, ids.shape)),
         opcode=upd(table.opcode, 0 if opcodes is None else opcodes),
+        fnid=upd(table.fnid, 0 if fnids is None else fnids),
         status=upd(table.status, 0),
     ), ids, ok
 
@@ -174,7 +178,8 @@ def n_active(table: SlotTable) -> jnp.ndarray:
 
 
 def transact(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
-             queues: jnp.ndarray, step: jnp.ndarray, opcodes=None):
+             queues: jnp.ndarray, step: jnp.ndarray, opcodes=None,
+             fnids=None):
     """Admit a batch and immediately retire the admitted slots — the fused
     engine's slot lifecycle (see core/fused.py and docs/ARCHITECTURE.md),
     where a request is admitted, executed, and completed inside ONE compiled
@@ -184,5 +189,6 @@ def transact(table: SlotTable, want: jnp.ndarray, volumes: jnp.ndarray,
     recorded, starvation behaviour matches the unfused admit/retire pair),
     but no slot id ever crosses to the host. Returns (table', slot_ids, ok).
     """
-    table, ids, ok = admit(table, want, volumes, queues, step, opcodes)
+    table, ids, ok = admit(table, want, volumes, queues, step, opcodes,
+                           fnids)
     return retire(table, ids, ok), ids, ok

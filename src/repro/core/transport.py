@@ -549,17 +549,23 @@ class SimNetTransport(ReplicaTransport):
 _REGISTRY: Dict[str, Callable[..., ReplicaTransport]] = {}
 
 
-def register_transport(name: str, factory: Optional[Callable] = None):
+def register_transport(name: str, factory: Optional[Callable] = None, *,
+                       override: bool = False):
     """Register ``factory(endpoint, **opts) -> ReplicaTransport`` under
-    ``name``. Usable directly or as a decorator; re-registering replaces
-    the factory (embedders can shadow a built-in)."""
+    ``name``. Usable directly or as a decorator. Duplicate names raise (the
+    uniform registry contract); embedders that mean to shadow a built-in
+    pass ``override=True``."""
+    def _put(f):
+        if name in _REGISTRY and not override:
+            raise ValueError(
+                f"duplicate transport {name!r} (registered: "
+                f"{', '.join(available_transports())}); pass override=True "
+                "to replace")
+        _REGISTRY[name] = f
+        return f
     if factory is None:
-        def deco(f):
-            _REGISTRY[name] = f
-            return f
-        return deco
-    _REGISTRY[name] = factory
-    return factory
+        return _put
+    return _put(factory)
 
 
 def available_transports() -> Tuple[str, ...]:

@@ -75,6 +75,7 @@ class HarnessResult:
     counters: Optional[Dict[str, Any]]  # transport counters (None w/o links)
     wall_s: float
     digest: str
+    compute_checked: int = 0            # COMPUTE SQEs checked vs mirrors
 
     @property
     def ok(self) -> bool:
@@ -92,6 +93,7 @@ class HarnessResult:
         return {
             "n_ops": self.n_ops, "completed": self.completed,
             "checked_reads": self.checked_reads,
+            "compute_checked": self.compute_checked,
             "oracle_ok": self.ok,
             "failures": (self.oracle_failures + self.harness_failures)[:5],
             "events_applied": len(self.events_applied),
@@ -134,6 +136,10 @@ class _Run:
         # (op-or-None, future, expected-bytes-or-None) awaiting the flush
         self.pending: List[Tuple[Optional[TraceOp], IOFuture,
                                  Optional[bytes]]] = []
+        # (context, future, expected (value, status, aux)) COMPUTE calls
+        self.pending_compute: List[Tuple[str, IOFuture, tuple]] = []
+        self.compute_checked = 0
+        self._n_comp = 0
         self.latency: Dict[str, List[float]] = {"read": [], "write": []}
         self.wait: Dict[str, List[float]] = {"read": [], "write": []}
         self.completion_ticks: List[int] = []
@@ -280,6 +286,83 @@ class _Run:
             fut = v.pread(op.off, op.nbytes)
             self.pending.append((op, fut, expected))
 
+    # -- in-band compute mixing ---------------------------------------------
+    # deterministic rotation through the built-ins: every ``compute_every``
+    # trace ops one COMPUTE SQE rides the same volume's queue, its expected
+    # (value, status, payload) captured at submission by running the
+    # entry's pure-Python mirror against the byte-oracle shadow — the same
+    # ordering point the read/write oracle uses. compare_and_write's mirror
+    # mutates the shadow on match, so subsequent reads check against the
+    # CAS-committed bytes.
+    _FN_CYCLE = ("checksum", "scan_count", "filter_pages",
+                 "verify_on_read", "compare_and_write")
+
+    def submit_compute(self, op: TraceOp) -> None:
+        from repro.compute import make_storage_fn
+        from repro.compute.functions import py_blocksum, py_i32
+        mgr = self.mgr
+        i = self._n_comp
+        self._n_comp += 1
+        fn = self._FN_CYCLE[i % len(self._FN_CYCLE)]
+        entry = make_storage_fn(fn)
+        v = self.vols[op.vol]
+        shadow = self.oracle.shadow[v.vid]
+        pby, bb = mgr.page_bytes, mgr.block_bytes
+        n_pages = mgr.capacity // pby
+        arg, data = 0, None
+        if entry.scope == "range":
+            p0 = (i * 5 + self.trace_seed) % n_pages
+            cnt = n_pages - p0
+            off, nbytes = p0 * pby, cnt * pby
+            page, count = p0, cnt
+            if fn != "checksum":
+                arg = -1 if i % 7 == 0 else (self.trace_seed * 31
+                                             + i * 17) % 256
+            expected = entry.mirror(shadow, pby, bb, page, count, arg, None)
+        else:
+            ab = (i * 13 + self.trace_seed) % (mgr.capacity // bb)
+            off, nbytes = ab * bb, bb
+            page, block = ab // mgr.page_blocks, ab % mgr.page_blocks
+            cur = py_blocksum(shadow[off:off + bb])
+            if fn == "compare_and_write":
+                data = payload_bytes(self.trace_seed, 100_000 + i, bb)
+                # alternate matching and stale expectations: both the
+                # committed and the ST_MISMATCH path replay under chaos
+                arg = cur if i % 2 == 0 else py_i32((cur + 1) & 0xFFFFFFFF)
+            else:                          # verify_on_read
+                arg = cur if i % 2 == 0 else 0
+            expected = entry.mirror(shadow, pby, bb, page, block, arg, data)
+        fut = v.compute(fn, off, nbytes, arg=arg, data=data)
+        self.pending_compute.append(
+            (f"compute {fn}@{i} vol{v.vid}[{off}:{off + nbytes}]",
+             fut, expected))
+
+    def _check_computes(self) -> None:
+        for ctx, fut, (e_val, e_stt, e_aux) in self.pending_compute:
+            if not fut.done():
+                self.harness_failures.append(
+                    f"{ctx}: IOFuture hung after a full flush")
+                continue
+            try:
+                res = fut.result()
+            except OSError as e:
+                self.harness_failures.append(f"{ctx}: {e}")
+                continue
+            self.compute_checked += 1
+            if (res.value, res.status) != (int(e_val), int(e_stt)):
+                self.oracle.failures.append(
+                    f"{ctx}: (value, status) = ({res.value}, {res.status}), "
+                    f"mirror expected ({int(e_val)}, {int(e_stt)})")
+            elif e_aux is not None:
+                got = (res.pages() if res.fn == "filter_pages"
+                       else res.data())
+                want = (list(e_aux) if res.fn == "filter_pages"
+                        else bytes(e_aux))
+                if got != want:
+                    self.oracle.failures.append(
+                        f"{ctx}: payload {got!r} != mirror {want!r}")
+        self.pending_compute.clear()
+
     def flush_burst(self, wait_before: Optional[int]) -> None:
         self.mgr.flush()
         wait_after = stats.wait_ticks(self.storage)
@@ -312,6 +395,8 @@ class _Run:
             self.wait[trace_ops[0][0].kind].append(
                 float(wait_after - wait_before))
         self.pending.clear()
+        if self.pending_compute:
+            self._check_computes()
 
     # -- end-of-trace verification ------------------------------------------
     def verify(self) -> bytes:
@@ -380,11 +465,16 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         write_policy: str = "all", read_policy: str = "rr",
         transport_opts: Optional[Dict[str, Any]] = None,
         geometry: Optional[Dict[str, int]] = None,
-        verify_replicas: bool = True, strict: bool = False) -> HarnessResult:
+        verify_replicas: bool = True, strict: bool = False,
+        compute_every: int = 0) -> HarnessResult:
     """One harness execution (module docstring). ``trace_ops`` /
     ``chaos_events`` bypass the generators (hand-crafted tests); otherwise
     both derive from the seeds. ``strict=True`` raises ``OracleMismatch``
-    at the end instead of returning a failed result."""
+    at the end instead of returning a failed result. ``compute_every=N``
+    mixes one COMPUTE SQE (rotating through the built-in storage
+    functions) into the stream every N trace ops, each checked against
+    its pure-Python mirror over the oracle shadow; 0 (the default) leaves
+    the stream — and the replay digest — untouched."""
     trace = trace or TraceConfig()
     geo = dict(GEOMETRY)
     geo.update(geometry or {})
@@ -425,6 +515,8 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
             for ev in by_index.pop(op.index, ()):
                 st.apply_event(ev)
             st.submit(op)
+            if compute_every and (op.index + 1) % compute_every == 0:
+                st.submit_compute(op)
             if op.last_in_burst:
                 st.flush_burst(wait_before)
                 wait_before = stats.wait_ticks(st.storage)
@@ -445,6 +537,7 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         result = HarnessResult(
             n_ops=len(trace_ops), completed=mgr.engine.completed,
             checked_reads=oracle.checked_reads,
+            compute_checked=st.compute_checked,
             oracle_failures=list(oracle.failures),
             harness_failures=st.harness_failures,
             events_applied=st.applied, events_skipped=st.skipped,
@@ -528,6 +621,17 @@ SCENARIOS: Dict[str, Dict[str, Any]] = {
                                    ("heal", 0.0), ("drop_on", 0.0),
                                    ("drop_off", 0.0))),
         verify_replicas=True),
+    # computational storage (repro/compute): COMPUTE SQEs — rotating
+    # through all five built-ins, including committed and mismatching
+    # compare_and_write — mixed into ring traffic under snapshot/clone/
+    # discard chaos, every result checked against the pure-Python mirror
+    # over the oracle shadow at submission time
+    "compute/steady": dict(
+        backend="ring", n_shards=2, n_replicas=2,
+        trace=TraceConfig(n_ops=160, n_volumes=4, read_frac=0.4,
+                          unaligned_frac=0.1),
+        chaos=ChaosConfig(n_events=8, weights=_CTRL_ONLY),
+        compute_every=5, verify_replicas=True),
 }
 
 # the replay-determinism gate re-runs this scenario and compares digests

@@ -1,1 +1,3 @@
-from repro.kernels import dbs_copy, flash_attention, paged_attention, rwkv6_scan  # noqa: F401
+# dbs_copy is a deprecation shim (warns on import) — no longer eagerly
+# imported here; reach it explicitly or use repro.kernels.dbs
+from repro.kernels import flash_attention, paged_attention, rwkv6_scan  # noqa: F401

@@ -57,10 +57,12 @@ _REGISTRY: Dict[str, DBSKernel] = {}
 
 
 def register_kernel(name: str, write: Optional[Callable] = None, *,
-                    read: Optional[Callable] = None) -> DBSKernel:
+                    read: Optional[Callable] = None,
+                    override: bool = False) -> DBSKernel:
     """Register a ``DBSKernel`` under ``name`` from its two callables (or
-    pass a ready ``DBSKernel`` as ``write``). Re-registering a name replaces
-    the entry — downstream embedders can shadow a built-in."""
+    pass a ready ``DBSKernel`` as ``write``). Duplicate names raise (the
+    uniform registry contract); embedders that mean to shadow a built-in
+    pass ``override=True``."""
     if isinstance(write, DBSKernel):
         kern = write
     else:
@@ -68,6 +70,11 @@ def register_kernel(name: str, write: Optional[Callable] = None, *,
             raise ValueError("register_kernel needs write= and read= "
                              "callables (or a DBSKernel)")
         kern = DBSKernel(name=name, write=write, read=read)
+    if name in _REGISTRY and not override:
+        raise ValueError(
+            f"duplicate kernel {name!r} (registered: "
+            f"{', '.join(available_kernels())}); pass override=True "
+            "to replace")
     _REGISTRY[name] = kern
     return kern
 

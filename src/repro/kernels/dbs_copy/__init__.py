@@ -2,5 +2,12 @@
 ``repro.kernels.dbs`` package (which adds the ``dbs_rw`` scatter/gather
 family and the kernel registry). These re-exports keep seed imports
 working; new code should import ``repro.kernels.dbs``."""
-from repro.kernels.dbs import (dbs_copy, dbs_copy_pool,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.kernels.dbs_copy is deprecated; import repro.kernels.dbs "
+    "(the unified DBS kernel package) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.kernels.dbs import (dbs_copy, dbs_copy_pool,  # noqa: F401,E402
                                dbs_copy_reference)

@@ -1,0 +1,280 @@
+"""Computational storage (ISSUE 9): the storage-function registry
+(repro/compute), the COMPUTE opcode class, and ``Volume.compute``.
+
+Contracts:
+
+1. **cross-backend bit-identity** — every built-in storage function
+   returns (value, status, payload) bit-identical to its pure-Python
+   mirror over a bytearray reference, parametrized over the host oracle
+   and the fused / sharded / ring device backends with both the ``xla``
+   and ``pallas`` DBS kernels.
+2. **compare_and_write rides the CoW write path** — a matching CAS
+   commits its payload (visible to subsequent reads on every replica), a
+   stale expectation returns ``ST_MISMATCH`` (a positive op-level status,
+   NOT an ``OSError``) and leaves the bytes untouched; a snapshot before
+   the CAS keeps the frozen image (CoW, not in-place).
+3. **in-band ordering** — on the ring, a COMPUTE SQE submitted between
+   writes observes exactly the preceding writes (submission order is
+   execution order), including when the batch mixes data and compute
+   lanes and when control ops drain on a sibling shard in the same pump.
+4. **registry surface** — registration order defines the SQE fn ids,
+   unknown names raise naming the registered entries, ``Volume.compute``
+   validates scope/alignment/data.
+"""
+import numpy as np
+import pytest
+
+from repro.compute import (ST_MISMATCH, available_storage_fns,
+                           make_storage_fn, register_storage_fn,
+                           storage_fn_id)
+from repro.compute.functions import py_blocksum, py_i32
+from repro.core.blockdev import VolumeManager
+
+BB = 16         # block_bytes
+PB = 4          # page_blocks -> page_bytes = 64
+PAGES = 8       # capacity = 512 bytes
+
+# (backend, n_shards) x kernel: the acceptance matrix. The host oracle
+# executes the sequential host_ref (kernel-independent).
+MATRIX = [("host", 1, "xla"), ("fused", 1, "xla"), ("fused", 1, "pallas"),
+          ("sharded", 2, "xla"), ("sharded", 2, "pallas"),
+          ("ring", 2, "xla"), ("ring", 2, "pallas")]
+
+
+def _mgr(backend: str, n_shards: int = 1, **kw) -> VolumeManager:
+    base = dict(backend=backend, n_shards=n_shards, payload_elems=BB,
+                page_blocks=PB, max_pages=PAGES, n_extents=256,
+                max_volumes=16, batch=16, n_replicas=2)
+    base.update(kw)
+    return VolumeManager(**base)
+
+
+def _pat(seed: int, n: int) -> bytes:
+    return bytes((seed * 37 + i * 11) % 251 for i in range(n))
+
+
+def _mirror(fn: str, shadow: bytearray, page, block, arg=0, data=None):
+    entry = make_storage_fn(fn)
+    return entry.mirror(shadow, PB * BB, BB, page, block, arg, data)
+
+
+# ---------------------------------------------------------------------------
+# 1. every built-in, bit-identical to the mirror, on every backend/kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,n_shards,kernel", MATRIX)
+def test_builtins_match_mirror_on_every_backend(backend, n_shards, kernel):
+    with _mgr(backend, n_shards, kernel=kernel) as mgr:
+        vol = mgr.create()
+        shadow = bytearray(mgr.capacity)
+        data = _pat(3, mgr.capacity - mgr.page_bytes)   # leave a hole page
+        vol.write(0, data)
+        shadow[:len(data)] = data
+        n_pages = mgr.capacity // mgr.page_bytes
+
+        # checksum: whole device and a page-aligned sub-range
+        for p0, cnt in ((0, n_pages), (2, 3)):
+            res = vol.compute("checksum", p0 * mgr.page_bytes,
+                              cnt * mgr.page_bytes).result()
+            want = _mirror("checksum", shadow, p0, cnt)
+            assert (res.value, res.status) == (want[0], want[1])
+
+        # scan_count / filter_pages: a present byte, an absent byte, and
+        # the nonzero predicate
+        present = data[5]
+        for arg in (present, 250 if present != 250 else 249, -1):
+            res = vol.compute("scan_count", arg=arg).result()
+            want = _mirror("scan_count", shadow, 0, n_pages, arg)
+            assert (res.value, res.status) == (want[0], want[1]), arg
+            res = vol.compute("filter_pages", arg=arg).result()
+            want = _mirror("filter_pages", shadow, 0, n_pages, arg)
+            assert (res.value, res.status) == (want[0], want[1]), arg
+            assert res.pages() == want[2], arg
+
+        # verify_on_read: bytes + blocksum, with and without the check
+        off = 3 * BB
+        cur = py_blocksum(shadow[off:off + BB])
+        for arg in (0, cur):
+            res = vol.compute("verify_on_read", off, arg=arg).result()
+            want = _mirror("verify_on_read", shadow,
+                           (off // BB) // PB, (off // BB) % PB, arg)
+            assert res.ok and res.value == want[0]
+            assert res.data() == bytes(want[2])
+        res = vol.compute("verify_on_read", off,
+                          arg=py_i32((cur + 1) & 0xFFFFFFFF)).result()
+        assert res.status == ST_MISMATCH and not res.ok
+        assert res.value == cur       # actual blocksum still reported
+
+
+@pytest.mark.parametrize("backend,n_shards,kernel", MATRIX)
+def test_compare_and_write_commit_and_mismatch(backend, n_shards, kernel):
+    with _mgr(backend, n_shards, kernel=kernel) as mgr:
+        vol = mgr.create()
+        vol.write(0, _pat(7, mgr.capacity))
+        off = 2 * BB
+        old = vol.read(off, BB)
+        new = _pat(9, BB)
+
+        # stale expectation: ST_MISMATCH (not OSError), bytes untouched
+        res = vol.compute("compare_and_write", off, data=new,
+                          arg=py_i32((py_blocksum(old) + 1)
+                                     & 0xFFFFFFFF)).result()
+        assert res.status == ST_MISMATCH
+        assert res.value == py_blocksum(old)     # actual blocksum reported
+        assert vol.read(off, BB) == old
+
+        # matching expectation: committed, visible to subsequent reads
+        res = vol.compute("compare_and_write", off, data=new,
+                          arg=py_blocksum(old)).result()
+        assert res.ok and res.value == py_blocksum(old)
+        assert vol.read(off, BB) == new
+
+
+def test_cas_is_cow_snapshot_preserved():
+    """The CAS commit rides the CoW write path: a snapshot taken before
+    the CAS keeps the frozen image while the head diverges."""
+    with _mgr("ring", 2) as mgr:
+        vol = mgr.create()
+        vol.write(0, _pat(1, mgr.capacity))
+        old = vol.read(0, BB)
+        vol.snapshot()
+        new = _pat(2, BB)
+        res = vol.compute("compare_and_write", 0, data=new,
+                          arg=py_blocksum(old)).result()
+        assert res.ok
+        assert vol.read(0, BB) == new
+        child = vol.clone()   # clones fork the head (new bytes)
+        assert child is not None and child.read(0, BB) == new
+
+
+# ---------------------------------------------------------------------------
+# 3. in-band ordering on the ring
+# ---------------------------------------------------------------------------
+def test_ring_compute_ordered_with_writes_in_one_drain():
+    """write -> compute -> write -> compute, all submitted before one
+    flush: each COMPUTE must observe exactly the writes submitted before
+    it (data lanes batch ahead of compute lanes; a later write never
+    jumps a pending compute)."""
+    with _mgr("ring", 2) as mgr:
+        vol = mgr.create()
+        a, b = _pat(4, BB), _pat(5, BB)
+        shadow = bytearray(mgr.capacity)
+        f1 = vol.pwrite(0, a)
+        shadow[:BB] = a
+        c1 = vol.compute("verify_on_read", 0)
+        want1 = bytes(shadow[:BB])
+        f2 = vol.pwrite(0, b)
+        shadow[:BB] = b
+        c2 = vol.compute("verify_on_read", 0)
+        want2 = bytes(shadow[:BB])
+        mgr.flush()
+        assert (f1.result(), f2.result()) == (BB, BB)
+        assert c1.result().data() == want1 == a
+        assert c2.result().data() == want2 == b
+
+
+def test_ring_compute_with_control_on_sibling_shard():
+    """One pump can drain control lanes on shard 0 while shard 1 drains
+    COMPUTE lanes — the merged batch signature must still execute the
+    compute phase (the cross-shard tier promotion in ``_canon``)."""
+    with _mgr("ring", 2) as mgr:
+        v0, v1 = mgr.create(), mgr.create()   # round-robin -> shards 0, 1
+        data = _pat(6, mgr.capacity)
+        v1.write(0, data)
+        mgr.flush()
+        # submit a control op (shard 0) and a compute (shard 1) into the
+        # same drain window
+        from repro.core.frontend import Request
+        r = Request(req_id=1 << 20, kind="snapshot", volume=v0.vid)
+        mgr.engine.submit(r)
+        fut = v1.compute("verify_on_read", 0)
+        mgr.flush()
+        assert r.status == 0
+        assert fut.result().data() == data[:BB]
+
+
+def test_ring_batch_mixes_data_and_compute_lanes():
+    """A read submitted after a CAS on the same block lands in a LATER
+    batch (rank downgrade cuts), so it observes the committed bytes."""
+    with _mgr("ring", 1) as mgr:
+        vol = mgr.create()
+        old = _pat(8, BB)
+        vol.write(0, old)
+        new = _pat(9, BB)
+        f_cas = vol.compute("compare_and_write", 0, data=new,
+                            arg=py_blocksum(old))
+        f_read = vol.pread(0, BB)
+        mgr.flush()
+        assert f_cas.result().ok
+        assert f_read.result() == new
+
+
+# ---------------------------------------------------------------------------
+# 4. registry + API surface
+# ---------------------------------------------------------------------------
+def test_registry_order_defines_fn_ids():
+    fns = available_storage_fns()
+    assert fns[:5] == ("checksum", "scan_count", "filter_pages",
+                       "compare_and_write", "verify_on_read")
+    for i, name in enumerate(fns):
+        assert storage_fn_id(name) == i
+
+
+def test_unknown_fn_raises_naming_registered():
+    with pytest.raises(ValueError, match="checksum"):
+        make_storage_fn("nope")
+    with _mgr("host") as mgr:
+        vol = mgr.create()
+        with pytest.raises(ValueError, match="unknown storage function"):
+            vol.compute("nope")
+
+
+def test_compute_validates_scope_alignment_and_data():
+    with _mgr("ring") as mgr:
+        vol = mgr.create()
+        with pytest.raises(ValueError, match="page-aligned"):
+            vol.compute("checksum", 3)
+        with pytest.raises(ValueError, match="block-aligned"):
+            vol.compute("verify_on_read", 5)
+        with pytest.raises(ValueError, match="exactly one block"):
+            vol.compute("verify_on_read", 0, 2 * BB)
+        with pytest.raises(ValueError, match="pass data="):
+            vol.compute("compare_and_write", 0)
+        with pytest.raises(ValueError, match="one block"):
+            vol.compute("compare_and_write", 0, data=b"x")
+        with pytest.raises(ValueError, match="does not take data"):
+            vol.compute("checksum", data=b"y" * BB)
+        with pytest.raises(ValueError, match="outside"):
+            vol.compute("verify_on_read", mgr.capacity)
+
+
+def test_custom_storage_fn_registers_and_runs():
+    """Embedder surface: a registered function is immediately callable on
+    a live ring manager (the program cache retraces on registry version)."""
+    import jax.numpy as jnp
+
+    def _apply(content, page, block, arg, payload):
+        s = content.reshape(-1).astype(jnp.int32).sum()
+        return (s, jnp.int32(0), jnp.zeros_like(payload),
+                jnp.asarray(False))
+
+    def _mirror(shadow, page_bytes, block_bytes, page, block, arg, data):
+        return sum(shadow), 0, None
+
+    name = "test_byte_sum"
+    if name not in available_storage_fns():
+        register_storage_fn(name, apply=_apply, host_ref=_apply,
+                            mirror=_mirror)
+    with _mgr("ring") as mgr:
+        vol = mgr.create()
+        data = _pat(11, mgr.capacity)
+        vol.write(0, data)
+        vol.compute("checksum").result()     # compile the pre-reg program
+        res = vol.compute(name).result()
+        assert res.value == sum(data) and res.ok
+
+
+def test_compute_on_null_storage_raises():
+    with pytest.raises(ValueError, match="storage functions"):
+        with _mgr("fused", null_storage=True) as mgr:
+            vol = mgr.create()
+            vol.compute("checksum").result()

@@ -110,3 +110,23 @@ def test_dbs_copy_shim_reexports_dbs_package():
     from repro.kernels.dbs import ops as pkg_ops
     assert shim_ops.dbs_copy is pkg_ops.dbs_copy
     assert shim_ops.default_interpret is pkg_ops.default_interpret
+
+
+def test_dbs_copy_shim_warns_deprecation_on_import():
+    """A fresh import of the shim emits DeprecationWarning pointing at
+    ``repro.kernels.dbs``, and still re-exports the real objects."""
+    import importlib
+    import sys
+    sys.modules.pop("repro.kernels.dbs_copy", None)
+    try:
+        with pytest.warns(DeprecationWarning, match=r"repro\.kernels\.dbs"):
+            shim = importlib.import_module("repro.kernels.dbs_copy")
+    finally:
+        # leave a fully-initialised module behind for later tests
+        if "repro.kernels.dbs_copy" not in sys.modules:
+            importlib.import_module("repro.kernels.dbs_copy")
+        shim = sys.modules["repro.kernels.dbs_copy"]
+    from repro.kernels import dbs as pkg
+    assert shim.dbs_copy is pkg.dbs_copy
+    assert shim.dbs_copy_pool is pkg.dbs_copy_pool
+    assert shim.dbs_copy_reference is pkg.dbs_copy_reference
