@@ -844,6 +844,132 @@ def check_compute_gate(compute: Dict[str, Any],
     return problems
 
 
+def run_durability(*, payload_elems: int = 64, pages: int = 64,
+                   n_requests: int = 512, repeats: int = 1,
+                   **_ignored) -> Dict[str, Any]:
+    """Durability subsystem (ISSUE 10), three measurements on the fused
+    engine:
+
+    (a) **journal overhead** — the same aligned-block write stream with
+        the write-ahead journal attached vs detached (interleaved
+        best-of-``repeats``). Group commit makes the bound ONE file append
+        per pump, not per op, so the attached column must hold the
+        ``check_durability_gate`` floor (<= 30% overhead).
+    (b) **crash recovery** — after the journaled run the manager is
+        ABANDONED (never closed — a dead process) and recovered from the
+        WAL; the recovered volume must read back byte-identical to the
+        original (the gate's correctness half).
+    (c) **spill-tier read throughput** — full-volume reads with the extent
+        pool 2x over-subscribed (``tier=`` budget at half the mapped
+        extents, spill/fill cycles every round) vs the all-resident pool;
+        reported as bytes/s + the achieved ratio.
+    """
+    import shutil
+    import tempfile
+
+    from repro.durability import recover
+
+    tmp = tempfile.mkdtemp(prefix="repro-durability-bench-")
+    geo = dict(backend="fused", payload_elems=payload_elems, page_blocks=4,
+               max_pages=pages, n_extents=4 * pages, max_volumes=8,
+               batch=32)
+    burst = 32
+    payloads = [bytes((k * 31 + i) % 251 for i in range(payload_elems))
+                for k in range(burst)]
+
+    def write_stream(mgr, vid, n_blocks):
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            mgr.pwrite(vid, ((i * 7919) % n_blocks) * payload_elems,
+                       payloads[i % burst])
+            if (i + 1) % burst == 0:
+                mgr.flush()
+        mgr.flush(durable=True)
+        return time.perf_counter() - t0
+
+    try:
+        jp = f"{tmp}/wal.dbsj"
+        mgr_on = VolumeManager(journal=jp, **geo)
+        mgr_off = VolumeManager(**geo)
+        cap = mgr_on.capacity
+        n_blocks = cap // payload_elems
+        vid_on = mgr_on.create().vid
+        vid_off = mgr_off.create().vid
+        write_stream(mgr_on, vid_on, n_blocks)      # warm both programs
+        write_stream(mgr_off, vid_off, n_blocks)
+        t_on = t_off = float("inf")
+        for _ in range(max(repeats, 3)):            # interleaved best-of
+            t_on = min(t_on, write_stream(mgr_on, vid_on, n_blocks))
+            t_off = min(t_off, write_stream(mgr_off, vid_off, n_blocks))
+        want = mgr_on.open(vid_on).read(0, cap)
+        mgr_off.close()
+        del mgr_on                                  # crash: abandoned
+        mgr_rec = recover(jp, **geo)
+        got = mgr_rec.open(vid_on).read(0, cap)
+        rec_info = dict(mgr_rec.recovery_info)
+        rec_info.pop("installed", None)
+        mgr_rec.close()
+
+        def read_tput(tier):
+            kwt = dict(geo, **({} if tier is None else {"tier": tier}))
+            m = VolumeManager(**kwt)
+            vids = [m.create().vid for _ in range(2)]
+            pby = m.page_bytes
+            for v in vids:                          # map 2 x pages extents
+                for p in range(pages):
+                    m.pwrite(v, p * pby, payloads[p % burst] * 4)
+            m.flush()
+            best = float("inf")
+            for _ in range(max(repeats, 3)):
+                t0 = time.perf_counter()
+                for v in vids:
+                    m.open(v).read(0, cap)
+                best = min(best, time.perf_counter() - t0)
+            spills = (m.stats()["tier"]["extents_spilled"]
+                      if tier is not None else 0)
+            m.close()
+            return 2 * cap / best, spills
+
+        resident_bps, _ = read_tput(None)
+        tiered_bps, spilled = read_tput(pages)      # budget = half the map
+        return {
+            "journal_on_ops_per_s": n_requests / t_on,
+            "journal_off_ops_per_s": n_requests / t_off,
+            "journal_overhead": t_on / t_off - 1.0,
+            "recovered_identical": got == want,
+            "recovery": rec_info,
+            "tier_read_bytes_per_s": tiered_bps,
+            "resident_read_bytes_per_s": resident_bps,
+            "tier_read_ratio": tiered_bps / resident_bps,
+            "tier_extents_spilled": spilled,
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def check_durability_gate(durability: Dict[str, Any],
+                          floor: float = 0.77) -> List[str]:
+    """ISSUE 10 acceptance: recovery is byte-identical, and the write-ahead
+    journal costs at most 30% of the unjournaled write stream (group
+    commit: one append per pump — a per-op fsync would fail this)."""
+    problems = []
+    if not durability["recovered_identical"]:
+        problems.append("durability: WAL recovery is NOT byte-identical "
+                        "to the crashed manager's volume")
+    on = durability["journal_on_ops_per_s"]
+    off = durability["journal_off_ops_per_s"]
+    if on < off * floor:
+        problems.append(
+            f"durability: journaled writes {on:.0f} ops/s < {floor:g}x "
+            f"unjournaled ({off:.0f} ops/s) — journal overhead "
+            f"{durability['journal_overhead'] * 100:.0f}% exceeds "
+            f"{(1 - floor) / floor * 100:.0f}%")
+    if durability["tier_extents_spilled"] <= 0:
+        problems.append("durability: spill-tier bench never spilled — the "
+                        "2x over-subscription did not exercise the tier")
+    return problems
+
+
 def check_serve_gate(serve: Dict[str, Any], floor: float = 1.0,
                      fork_flat: float = 4.0) -> List[str]:
     """PR 8 acceptance: zero-copy serving holds >= ``floor``x the
@@ -938,11 +1064,12 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections to run "
                          "(ladder,mixed,blockdev,replication,trace,"
-                         "kernels,serve,compute); default runs everything")
+                         "kernels,serve,compute,durability); default runs "
+                         "everything")
     args = ap.parse_args(argv)
 
     sections = ("ladder", "mixed", "blockdev", "replication", "trace",
-                "kernels", "serve", "compute")
+                "kernels", "serve", "compute", "durability")
     if args.only is None:
         want = set(sections)
     else:
@@ -963,6 +1090,7 @@ def main(argv=None) -> int:
     kernels = run_kernels(**kw) if "kernels" in want else None
     serve = run_serve(smoke=bool(args.smoke), **kw) if "serve" in want else None
     compute = run_compute(**kw) if "compute" in want else None
+    durability = run_durability(**kw) if "durability" in want else None
 
     if ladder is not None:
         width = max(len(c) for c in COLUMNS) + 2
@@ -1021,6 +1149,18 @@ def main(argv=None) -> int:
               f"{compute['read_back_bytes_per_s']:.3g} B/s "
               f"(x{compute['speedup']:.1f}); bit-identical to the mirror: "
               f"{compute['identical']}")
+    if durability is not None:
+        print("durability (write-ahead journal + WAL recovery + spill "
+              "tier): journaled "
+              f"{durability['journal_on_ops_per_s']:.0f} ops/s vs "
+              f"unjournaled {durability['journal_off_ops_per_s']:.0f} "
+              f"ops/s ({durability['journal_overhead'] * 100:+.0f}%); "
+              "recovered byte-identical: "
+              f"{durability['recovered_identical']}; tiered reads at 2x "
+              f"over-subscription {durability['tier_read_bytes_per_s']:.3g}"
+              f" B/s vs all-resident "
+              f"{durability['resident_read_bytes_per_s']:.3g} B/s "
+              f"(x{durability['tier_read_ratio']:.2f})")
 
     if args.out:
         doc = {"bench": "ladder", "kind": args.kind,
@@ -1029,7 +1169,8 @@ def main(argv=None) -> int:
         for key, val in (("ops_per_s", ladder), ("mixed_control", mixed),
                          ("blockdev", blockdev), ("replication", replication),
                          ("trace", trace), ("kernels", kernels),
-                         ("serve", serve), ("compute", compute)):
+                         ("serve", serve), ("compute", compute),
+                         ("durability", durability)):
             if val is not None:
                 doc[key] = val
         with open(args.out, "w") as f:
@@ -1054,6 +1195,8 @@ def main(argv=None) -> int:
             problems += check_serve_gate(serve)
         if compute is not None:
             problems += check_compute_gate(compute)
+        if durability is not None:
+            problems += check_durability_gate(durability)
         if problems:
             print("REGRESSION:\n  " + "\n  ".join(problems), file=sys.stderr)
             return 1
@@ -1065,10 +1208,11 @@ def main(argv=None) -> int:
               "the chaos harness is oracle-clean, replay-deterministic and "
               "inside its straggler tail bounds, every registered DBS "
               "kernel is bit-identical to the xla reference, zero-copy "
-              "serving holds the copy-based floor with O(1) fork, and the "
+              "serving holds the copy-based floor with O(1) fork, the "
               "in-band volume scan is bit-identical to the host reference "
-              "at >= 2x the read-back baseline "
-              "(sections gated by --only run their checks only)")
+              "at >= 2x the read-back baseline, and the write-ahead "
+              "journal holds its overhead bound with byte-identical WAL "
+              "recovery (sections gated by --only run their checks only)")
     return 0
 
 

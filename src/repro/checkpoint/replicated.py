@@ -2,15 +2,17 @@
 
 Writes go to every healthy replica and the save completes only when all
 acked; restore reads from the replica with the newest valid version
-(round-robin among ties); ``rebuild`` restores a lost replica by streaming
-the device file from the most up-to-date healthy copy — the engine-level
-replica rebuild, applied to the checkpoint plane.
+(round-robin among ties); ``rebuild`` restores a lost replica by STREAMING
+the donor's committed volumes block-by-block through both stores' public
+read/write paths (``repro.durability.export.stream_store`` — the export
+plane's chunked FETCH_PAGES/PUSH_PAGES analogue, with transport-style
+accounting) — the engine-level replica rebuild, applied to the checkpoint
+plane. The last rebuild's traffic is kept on ``last_rebuild``.
 """
 from __future__ import annotations
 
 import os
-import shutil
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.store import CheckpointStore
 
@@ -66,17 +68,23 @@ class ReplicatedCheckpoint:
         if os.path.exists(self.paths[idx]):
             os.remove(self.paths[idx])
 
-    def rebuild(self, idx: int) -> None:
-        """Stream the device from the most up-to-date healthy replica."""
+    def rebuild(self, idx: int) -> Dict[str, Any]:
+        """Rebuild a lost replica from the first healthy donor: create a
+        FRESH store at the replica's path (``fail`` removed the file) and
+        stream every committed checkpoint volume into it through the public
+        block paths — no device-file copying. Returns the stream summary
+        ({"volumes": {name: blocks}, "counters": ...})."""
         donors = self.healthy()
         if not donors:
             raise IOError("no donor replica")
-        donor = donors[0]
-        self.stores[donor].dev.f.flush()
+        from repro.durability.export import stream_store
+        donor = self.stores[donors[0]]
+        donor.dev.f.flush()
         os.makedirs(os.path.dirname(self.paths[idx]) or ".", exist_ok=True)
-        shutil.copyfile(self.paths[donor], self.paths[idx])
         self.stores[idx] = CheckpointStore(self.paths[idx],
                                            capacity_bytes=self.capacity)
+        self.last_rebuild = stream_store(donor, self.stores[idx])
+        return self.last_rebuild
 
     def consistent(self) -> bool:
         revs = {self.stores[i].dev.revision for i in self.healthy()}

@@ -58,7 +58,8 @@ import numpy as np
 from repro.core import dbs
 from repro.core.control import ControlDispatch
 from repro.core.frontend import MultiQueueFrontend, Request
-from repro.core.fused import fused_step, fused_step_read
+from repro.core.fused import (fused_step, fused_step_read,
+                              fused_step_read_tiered, fused_step_tiered)
 from repro.core.replication import ReplicaGroup
 
 
@@ -322,6 +323,16 @@ class FusedBackend(_FrontendBackendBase):
                 f"{cfg.write_policy!r}/read_policy={cfg.read_policy!r} "
                 "need a host-dispatch backend (loop | slots)")
         super().__init__(cfg)
+        # cold-extent spill tier (repro/durability/tier.py): bounded
+        # device-resident hot set, host-memory capacity tier, spill/fill at
+        # the pump boundary. Needs the real DBS storage plane.
+        self.tier = None
+        if getattr(cfg, "tier", None) is not None:
+            if cfg.null_backend or cfg.null_storage:
+                raise ValueError("tier= needs the real storage plane "
+                                 "(null_backend/null_storage hold no pools)")
+            from repro.durability.tier import as_tier
+            self.tier = as_tier(cfg.tier, cfg.n_extents)
 
     def pump(self) -> int:
         """One controller iteration as ONE compiled program (core/fused.py).
@@ -331,6 +342,12 @@ class FusedBackend(_FrontendBackendBase):
         lanes were admitted and to carry read payloads out. Between admission
         and completion nothing crosses the host: the slot table, replica
         DBS states and payload pools round-trip device-side.
+
+        With a tier, spill/fill rides the pump boundary: spilled extents the
+        batch touches fault in (one batched row-scatter per replica) before
+        the step, the step itself is the *tiered* single program (it also
+        stamps per-extent access ticks), and an over-budget resident set is
+        rebalanced after — the in-program hot path is unchanged.
         """
         reqs, batch = self.frontend.drain_batch(self.cfg.payload_shape)
         if not reqs:
@@ -342,7 +359,24 @@ class FusedBackend(_FrontendBackendBase):
             states, pools = self.storage.device_state()
             page_revs = self.storage.device_page_revs()
             rr = self.storage.bump_rr()
-        if any(r.kind == "write" for r in reqs):
+        tier = self.tier
+        if tier is not None:
+            table_host = np.asarray(jax.device_get(states[0].table))
+            pools, touched = tier.fault_in(table_host, reqs, pools)
+            if any(r.kind == "write" for r in reqs):
+                (table, states, pools, page_revs, stamps, ok,
+                 reads) = fused_step_tiered(
+                    self.frontend.table, states, pools, page_revs,
+                    tier.stamps, batch, rr, kernel=self._kernel)
+                self.storage.set_device_page_revs(page_revs)
+            else:
+                table, stamps, ok, reads = fused_step_read_tiered(
+                    self.frontend.table, states, pools, tier.stamps, batch,
+                    rr, kernel=self._kernel)
+            tier.stamps = stamps
+            pools = tier.balance(pools, protect=touched)
+            self.storage.set_device_state(states, pools)
+        elif any(r.kind == "write" for r in reqs):
             table, states, pools, page_revs, ok, reads = fused_step(
                 self.frontend.table, states, pools, page_revs, batch, rr,
                 null_backend=self.cfg.null_backend,

@@ -71,6 +71,13 @@ import numpy as np
 
 from repro.core.engine import Engine, EngineConfig
 from repro.core.frontend import Request
+from repro.core.transport import (MSG_CLONE, MSG_CREATE, MSG_DELETE,
+                                  MSG_SNAPSHOT, MSG_UNMAP, MSG_WRITE,
+                                  WireMsg)
+
+# control kinds the durability journal records (core -> journal opcode)
+_JOURNAL_CTRL = {"snapshot": MSG_SNAPSHOT, "clone": MSG_CLONE,
+                 "delete": MSG_DELETE}
 
 
 def _bytes_to_lanes(data: bytes) -> np.ndarray:
@@ -188,8 +195,10 @@ class Volume:
     def discard(self, off: int, nbytes: int) -> IOFuture:
         return self.mgr.discard(self.vid, off, nbytes)
 
-    def flush(self) -> None:
-        self.mgr.flush()
+    def flush(self, durable: bool = False) -> None:
+        """Drain in-flight I/O; ``durable=True`` additionally fsyncs the
+        durability journal (repro/durability) — the write barrier."""
+        self.mgr.flush(durable=durable)
 
     # -- computational storage ------------------------------------------------
     def compute(self, fn: str, off: int = 0, nbytes: Optional[int] = None,
@@ -268,7 +277,8 @@ class VolumeManager:
                  kernel: str = "auto", transport: str = "local",
                  write_policy: str = "all", read_policy: str = "rr",
                  transport_opts: Optional[Dict[str, Any]] = None,
-                 payload_shape: Optional[Tuple[int, ...]] = None):
+                 payload_shape: Optional[Tuple[int, ...]] = None,
+                 journal: Any = None, tier: Any = None):
         # payload_shape overrides the byte-API's flat (payload_elems,) lane
         # layout with an arbitrary per-block tensor — the serving engine
         # stores one token's K/V for every layer in one block
@@ -287,7 +297,13 @@ class VolumeManager:
             null_storage=null_storage, cow=cow, kernel=kernel,
             transport=transport,
             write_policy=write_policy, read_policy=read_policy,
-            transport_opts=transport_opts))
+            transport_opts=transport_opts, journal=journal, tier=tier))
+        # durability journal (repro/durability/journal.py): the manager
+        # buffers one WireMsg per mutating public-API op and group-commits
+        # the buffer — ONE append + seal — at every pump boundary, BEFORE
+        # the engine applies the batch (write-ahead)
+        self._journal = self.engine.journal
+        self._jbuf: List[WireMsg] = []
         self._closed = False
         self.backend_name = backend
         self.block_bytes = payload_elems
@@ -357,7 +373,24 @@ class VolumeManager:
         self._check_open()
         self.engine.submit(req)
 
+    # ------------------------------------------------------------ journaling
+    def _journal_seal(self) -> None:
+        """Group commit: append the buffered records + ONE seal as a single
+        file write (write-ahead: called before the engine pumps/drains)."""
+        if self._journal is not None and self._jbuf:
+            self._journal.append_batch(self._jbuf)
+            self._jbuf.clear()
+
+    def attach_journal(self, journal) -> None:
+        """Adopt a (recovered, tail-truncated) journal: subsequent mutating
+        ops append to it. ``durability.recovery.recover``'s reattach hook."""
+        self._journal = journal
+        self.engine.journal = journal
+        self.engine._journal_owned = True
+
     def pump(self) -> int:
+        if self._jbuf:
+            self._journal_seal()
         done = self.engine.pump()
         if self._n_pending and self.engine.depth() == 0:
             # queues empty after a pump => every submitted op completed:
@@ -371,14 +404,22 @@ class VolumeManager:
     def drain(self) -> int:
         return self.flush()
 
-    def flush(self) -> int:
+    def flush(self, durable: bool = False) -> int:
         """Complete everything in flight (the backends' pipelined drain —
-        one device fetch per pump). Returns the number of completions."""
+        one device fetch per pump). Returns the number of completions.
+
+        ``durable=True`` is the durability barrier: after the drain the
+        journal is fsync'd, so every acked op survives a crash (without it,
+        sealed records sit in OS buffers — crash-consistent but only as
+        durable as the page cache)."""
+        self._journal_seal()
         done = self.engine.drain()
         if self._n_pending:
             self._pending_w.clear()
             self._pending_r.clear()
             self._n_pending = 0
+        if durable and self._journal is not None:
+            self._journal.sync()
         return done
 
     def close(self) -> int:
@@ -394,6 +435,10 @@ class VolumeManager:
         storage = self.engine.backend
         if storage is not None and hasattr(storage, "drain_transports"):
             storage.drain_transports()    # quorum/async stragglers land
+        if self._journal is not None:
+            self._journal.sync()
+            if self.engine._journal_owned:
+                self._journal.close()
         self._closed = True
         return done
 
@@ -419,6 +464,13 @@ class VolumeManager:
         if table is not None:
             from repro.core import slots
             out["slots_active"] = int(np.asarray(slots.n_active(table)))
+        if self._journal is not None:
+            out["journal"] = {"seq": self._journal.seq,
+                              "appends": self._journal.appends,
+                              "records": self._journal.records}
+        tier = getattr(self.engine.impl, "tier", None)
+        if tier is not None:
+            out["tier"] = tier.to_dict()
         return out
 
     # ------------------------------------------------------------ lifecycle
@@ -427,6 +479,9 @@ class VolumeManager:
         vid = self.engine.create_volume()
         if vid is None or vid < 0:
             raise RuntimeError("volume table full")
+        if self._journal is not None:
+            self._jbuf.append(WireMsg(op=MSG_CREATE, volume=vid,
+                                      meta=(vid, 0)))
         vol = Volume(self, vid)
         self.volumes[vid] = vol
         return vol
@@ -444,9 +499,17 @@ class VolumeManager:
             r = Request(req_id=self._rid(vid), kind=kind, volume=vid)
             self.engine.submit(r)
             self.flush()
-            return r.result
-        self.flush()
-        return self.engine.control(kind, volume=vid, **kw)
+            res = r.result
+        else:
+            self.flush()
+            res = self.engine.control(kind, volume=vid, **kw)
+        op = _JOURNAL_CTRL.get(kind)
+        if op is not None and self._journal is not None:
+            # the engine's result id rides meta so recovery can ASSERT its
+            # replay allocated the same volume/snapshot ids
+            rid = -1 if res is None else int(res)
+            self._jbuf.append(WireMsg(op=op, volume=vid, meta=(rid, 0)))
+        return res
 
     def snapshot(self, vol) -> Any:
         return self._control_sync("snapshot", self._vid(vol))
@@ -547,7 +610,38 @@ class VolumeManager:
                 submit(r)
                 reqs.append(r)
         self._track(self._pending_w, vid, first, last + 1)
+        if self._journal is not None:
+            # ONE record per pwrite: the POST-RMW block-aligned lanes, so
+            # replay applies them directly — no re-merge needed (replay has
+            # already applied every earlier record, so the merged edge
+            # bytes are exactly what this record carries)
+            # bytes(data) is the post-RMW whole-block span already in hand:
+            # the record costs two list comprehensions, no numpy, and the
+            # journal stores one uint8 per lane
+            self._jbuf.append(WireMsg(
+                op=MSG_WRITE, volume=vid,
+                pages=[r.page for r in reqs],
+                blocks=[r.block for r in reqs],
+                payload=bytes(data)))
         return IOFuture(self, reqs, value=n)
+
+    def _replay_write(self, vid: int, pages, blocks, lanes) -> None:
+        """Recovery replay of one journaled ``MSG_WRITE`` record: re-submit
+        its block lanes through the normal path — hazard fence included, so
+        replay re-serializes exactly the overlapping spans the original run
+        fenced (durability/recovery.py)."""
+        self._check_open()
+        pb = self.page_blocks
+        abs_blocks = np.asarray(pages, np.int64) * pb + np.asarray(blocks)
+        lo, hi = int(abs_blocks.min()), int(abs_blocks.max()) + 1
+        if self._n_pending:
+            self._fence_write(vid, lo, hi)
+        submit = self._fast_submit
+        for p, b, lane in zip(pages, blocks, lanes):
+            submit(Request(req_id=self._rid(vid), kind="write", volume=vid,
+                           page=int(p), block=int(b),
+                           payload=np.asarray(lane, np.float32)))
+        self._track(self._pending_w, vid, lo, hi)
 
     def discard(self, vol, off: int, nbytes: int) -> IOFuture:
         """TRIM ``[off, off+nbytes)``: fully covered pages are unmapped
@@ -565,16 +659,8 @@ class VolumeManager:
         last_full = end // pby
         reqs: List[Request] = []
         if first_full < last_full:
-            pages = list(range(first_full, last_full))
-            if self._inband:
-                for p in pages:
-                    r = Request(req_id=self._rid(vid), kind="unmap",
-                                volume=vid, page=p)
-                    self.engine.submit(r)
-                    reqs.append(r)
-            else:
-                self.flush()                     # order: behind in-flight ops
-                self.engine.unmap(vid, pages)
+            reqs.extend(self._unmap_pages(vid,
+                                          list(range(first_full, last_full))))
             edges = [(off, first_full * pby), (last_full * pby, end)]
         else:
             edges = [(off, end)]
@@ -582,6 +668,25 @@ class VolumeManager:
             if b > a:
                 reqs.extend(self.pwrite(vid, a, b"\x00" * (b - a))._reqs)
         return IOFuture(self, reqs, value=nbytes)
+
+    def _unmap_pages(self, vid: int, pages: List[int]) -> List[Request]:
+        """Unmap fully covered pages (extents freed): in-band UNMAP SQEs on
+        the ring, flush-then-host-dispatch elsewhere. Journaled as ONE
+        ``MSG_UNMAP`` record; also recovery's replay entry for that record."""
+        reqs: List[Request] = []
+        if self._inband:
+            for p in pages:
+                r = Request(req_id=self._rid(vid), kind="unmap",
+                            volume=vid, page=p)
+                self.engine.submit(r)
+                reqs.append(r)
+        else:
+            self.flush()                     # order: behind in-flight ops
+            self.engine.unmap(vid, pages)
+        if self._journal is not None and pages:
+            self._jbuf.append(WireMsg(op=MSG_UNMAP, volume=vid,
+                                      pages=np.asarray(pages, np.int32)))
+        return reqs
 
     # ------------------------------------------------- computational storage
     def compute(self, vol, fn: str, off: int = 0,
@@ -633,6 +738,19 @@ class VolumeManager:
             payload = _bytes_to_lanes(data)
         elif data is not None:
             raise ValueError(f"{fn!r} does not take data=")
+
+        if entry.writes and self._journal is not None:
+            # only MUTATING storage functions are journaled (read-only ones
+            # don't change state); replay re-executes them in place — their
+            # outcome is a pure function of the replayed device state
+            from repro.durability.journal import OP_COMPUTE
+            self._jbuf.append(WireMsg(
+                op=OP_COMPUTE, volume=vid,
+                pages=np.asarray([page], np.int32),
+                blocks=np.asarray([block], np.int32),
+                extents=fn.encode(),
+                meta=(int(arg), 1 if entry.scope == "range" else 0),
+                payload=data))
 
         def wrap(value, status, lanes) -> ComputeResult:
             return ComputeResult(fn=fn, value=int(value), status=int(status),

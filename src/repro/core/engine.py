@@ -79,6 +79,15 @@ class EngineConfig:
                                  # per-transport knobs (simnet: latency /
                                  # window / drop / reorder / seed; list
                                  # values are per-replica)
+    journal: Any = None          # durability write-ahead journal: a path or
+                                 # a repro.durability.journal.Journal. The
+                                 # block-device manager group-commits every
+                                 # mutating public-API op to it at each pump
+                                 # boundary (repro/durability/journal.py)
+    tier: Any = None             # cold-extent spill tier (comm="fused" only):
+                                 # an int device-extent budget, a
+                                 # dict(device_extents=N), or an ExtentTier
+                                 # (repro/durability/tier.py)
 
 
 class Engine:
@@ -104,8 +113,22 @@ class Engine:
             raise ValueError(
                 f"unknown kernel {cfg.kernel!r} (expected auto | "
                 f"{' | '.join(available_kernels())})")
+        if cfg.tier is not None and cfg.comm != "fused":
+            raise ValueError(
+                f"tier= (the cold-extent spill tier) needs comm='fused' — "
+                f"the tier's access stamps live in the fused step; got "
+                f"comm={cfg.comm!r}")
         from repro.core.backends import make_backend
         self._impl = make_backend(cfg.comm, cfg)
+        # the durability journal (repro/durability): resolved here so
+        # EngineConfig(journal=path) is enough to enable it; the manager
+        # (core/blockdev.py) owns the record buffer and the group commit
+        self.journal = None
+        self._journal_owned = False
+        if cfg.journal is not None:
+            from repro.durability.journal import as_journal
+            self.journal = as_journal(cfg.journal)
+            self._journal_owned = self.journal is not cfg.journal
         self.pool = (self._impl if getattr(self._impl, "is_pool", False)
                      else None)
         self.frontend = self._impl.frontend

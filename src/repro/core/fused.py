@@ -230,3 +230,101 @@ def fused_step_read(table: slots.SlotTable, states: Tuple[dbs.DBSState, ...],
     return step_core_read(table, states, pools, batch, rr,
                           null_backend=null_backend,
                           null_storage=null_storage, kernel=kernel)
+
+
+# ---------------------------------------------------------------------------
+# tiered variants: the same step + per-extent access stamps for the spill
+# tier (repro/durability/tier.py). The stamps array is (E+1,) int32 — row E
+# is the dump slot invalid lanes scatter into — and every extent a batch
+# resolves (read extents, write destinations AND CoW sources) is stamped
+# with the batch step INSIDE the same program, so the clock/second-chance
+# eviction sweep needs no extra device round-trip on the hot path.
+# ---------------------------------------------------------------------------
+def _stamp_tier(stamps, state, batch: FusedBatch, ok, cow_src=None):
+    """Stamp the batch's resolved extents with the admission step.
+
+    ``state`` is the POST-write replica-0 state, so write lanes resolve to
+    their freshly allocated/CoW'd destination extents; ``cow_src`` (the
+    write ops' CoW sources, pre-write extents) is stamped too — a CoW read
+    is an access. Invalid lanes clamp to the dump row E, which is zeroed
+    back so it never looks hot."""
+    dump = stamps.shape[0] - 1
+    ext = dbs.read_resolve(state, batch.volume, batch.page)
+    idx = jnp.where(ok & (ext >= 0), ext, dump)
+    stamps = stamps.at[idx].max(batch.step)
+    if cow_src is not None:
+        src = jnp.where(ok & batch.is_write & (cow_src >= 0), cow_src, dump)
+        stamps = stamps.at[src].max(batch.step)
+    return stamps.at[dump].set(0)
+
+
+def step_core_tiered(table: slots.SlotTable,
+                     states: Tuple[dbs.DBSState, ...],
+                     pools: Tuple[jnp.ndarray, ...],
+                     page_revs: Tuple[jnp.ndarray, ...],
+                     stamps: jnp.ndarray, batch: FusedBatch,
+                     rr: jnp.ndarray, *, kernel: str = "pallas"):
+    """``step_core`` + tier stamping (un-jitted). The tier needs the real
+    storage plane, so there are no null_backend/null_storage forms."""
+    table, ids, ok = slots.transact(table, batch.want, batch.volume,
+                                    batch.queue, batch.step)
+    reads = jnp.zeros_like(batch.payload)
+    wmask = ok & batch.is_write
+    bits = jnp.uint32(1) << batch.block.astype(jnp.uint32)
+    out_states, out_pools, out_prs = [], [], []
+    cow_src = None
+    for i, st in enumerate(states):            # mirrored write-to-all
+        st, wops = dbs.write_pages(st, batch.volume, batch.page, bits, wmask)
+        if cow_src is None:
+            cow_src = wops.cow_src             # replicas agree (mirror-all)
+        out_pools.append(_cow_apply(pools[i], wops, batch.payload,
+                                    batch.block, kernel))
+        out_prs.append(stamp_page_rev(page_revs[i], batch.volume,
+                                      batch.page, wops.ok, st.revision))
+        out_states.append(st)
+    stamps = _stamp_tier(stamps, out_states[0], batch, ok, cow_src)
+    reads = _rr_gather(out_states, out_pools, batch, rr,
+                       ok & ~batch.is_write, reads, None, kernel)
+    return (table, tuple(out_states), tuple(out_pools), tuple(out_prs),
+            stamps, ok, reads)
+
+
+@partial(jax.jit, static_argnames=("kernel",),
+         donate_argnums=(0, 1, 2, 3, 4))
+def fused_step_tiered(table: slots.SlotTable,
+                      states: Tuple[dbs.DBSState, ...],
+                      pools: Tuple[jnp.ndarray, ...],
+                      page_revs: Tuple[jnp.ndarray, ...],
+                      stamps: jnp.ndarray, batch: FusedBatch,
+                      rr: jnp.ndarray, *, kernel: str = "pallas"):
+    """``fused_step`` with the tier's access stamps threaded through — still
+    ONE compiled program per batch geometry; the stamps ride the donation
+    list like the other per-pump state."""
+    return step_core_tiered(table, states, pools, page_revs, stamps, batch,
+                            rr, kernel=kernel)
+
+
+def step_core_read_tiered(table: slots.SlotTable,
+                          states: Tuple[dbs.DBSState, ...],
+                          pools: Tuple[jnp.ndarray, ...],
+                          stamps: jnp.ndarray, batch: FusedBatch,
+                          rr: jnp.ndarray, *, kernel: str = "xla"):
+    table, ids, ok = slots.transact(table, batch.want, batch.volume,
+                                    batch.queue, batch.step)
+    reads = jnp.zeros_like(batch.payload)
+    stamps = _stamp_tier(stamps, states[0], batch, ok, None)
+    reads = _rr_gather(states, pools, batch, rr, ok & ~batch.is_write,
+                       reads, None, kernel)
+    return table, stamps, ok, reads
+
+
+@partial(jax.jit, static_argnames=("kernel",), donate_argnums=(0, 3))
+def fused_step_read_tiered(table: slots.SlotTable,
+                           states: Tuple[dbs.DBSState, ...],
+                           pools: Tuple[jnp.ndarray, ...],
+                           stamps: jnp.ndarray, batch: FusedBatch,
+                           rr: jnp.ndarray, *, kernel: str = "xla"):
+    """``fused_step_read`` + tier stamping: states/pools stay inputs-only,
+    the slot table and the stamps are donated."""
+    return step_core_read_tiered(table, states, pools, stamps, batch, rr,
+                                 kernel=kernel)

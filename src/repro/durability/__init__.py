@@ -1,0 +1,48 @@
+"""Durability subsystem: journal, crash recovery, incremental export, tiering.
+
+Everything the engine stores today lives in device pools — a process crash
+loses all volumes, which is what separates the engine demo from the SDS the
+paper's Longhorn actually is. This package adds the missing durability
+plane as four cooperating modules, all riding existing surfaces:
+
+- ``journal``  — a crash-consistent write-ahead journal. Every mutating op
+  the public API accepts is captured as a PR-5 ``WireMsg`` record (same
+  wire format + opcodes as the controller<->replica transport) and
+  group-committed — ONE append per pump, not per op — with per-record
+  checksums computed with the compute registry's rotate/XOR algebra
+  (``py_blocksum``) for torn-tail detection. Exposed as
+  ``EngineConfig(journal=...)`` / ``VolumeManager(journal=...)`` and the
+  ``Volume.flush(durable=True)`` barrier.
+- ``recovery`` — ``recover(...)``: rebuild a ``VolumeManager`` after a
+  crash by installing the last export (when one exists) and replaying the
+  journal tail through the same public submission path, byte-identical to
+  a shadow oracle.
+- ``export``   — ``SnapshotExport``: incremental snapshot export built on
+  the ``page_rev`` watermarks — each section ships ONLY the extents backing
+  pages newer than the previous section's watermark row (the PR-5
+  delta-rebuild selection), into a versioned on-disk file with
+  header-commits-last ordering. ``ExportCounters`` mirrors the transport
+  counters so "moved exactly the delta" is assertable. The replicated
+  checkpoint's rebuild (checkpoint/replicated.py) streams through
+  ``stream_store`` instead of ``shutil`` file copies.
+- ``tier``     — ``ExtentTier``: a capacity tier for the fused engine that
+  spills cold extents to host memory and keeps a bounded device-resident
+  hot set (clock/second-chance over per-extent access stamps maintained
+  IN the fused step), faulting spilled extents back in batched prefetches
+  at the pump boundary — the hot path stays one jitted program per pump.
+
+See docs/ARCHITECTURE.md ("Durability & tiering").
+"""
+from repro.durability.export import (ExportCounters, SnapshotExport,
+                                     stream_store)
+from repro.durability.journal import (OP_COMPUTE, OP_SEAL, Journal,
+                                      JournalView, read_journal)
+from repro.durability.recovery import recover
+from repro.durability.tier import ExtentTier
+
+__all__ = [
+    "Journal", "JournalView", "read_journal", "OP_COMPUTE", "OP_SEAL",
+    "SnapshotExport", "ExportCounters", "stream_store",
+    "recover",
+    "ExtentTier",
+]

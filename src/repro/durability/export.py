@@ -1,0 +1,347 @@
+"""Incremental snapshot export on the ``page_rev`` watermarks (pillar 3).
+
+A ``SnapshotExport`` is one versioned on-disk file of append-only
+*sections*. Each ``export(mgr)`` call ships
+
+- the full (small) metadata: the replica ``DBSState`` leaves, the volume
+  table, the ``page_rev`` watermark array and the manager's open volume
+  ids — a section is self-describing for control state, and
+- ONLY the delta of the (large) payload pool: the extents backing pages
+  whose ``page_rev`` is newer than the *previous section's* watermark row —
+  exactly the selection the PR-5 streamed delta rebuild computes
+  (``transport._delta_extents``: ``np.unique`` of
+  ``table[(page_rev > target) & (table >= 0)]``).
+
+Content an extent carried at an older watermark was shipped by the section
+that covered that watermark, so replaying the sections in order (later
+rows win) reconstructs every live extent; freed-but-unshipped extents
+restore as zeros, which is what the hole-masked read path serves anyway.
+
+**Commit ordering** mirrors checkpoint/store.py: section bytes are
+appended and flushed FIRST, then the fixed-size file header (which holds
+the committed section count) is rewritten — a torn append leaves the
+header pointing at the old, consistent prefix.
+
+``ExportCounters`` mirrors the transport counters (``ReplicaTransport``'s
+``sent`` / ``pages_moved``) so tests assert "this export moved exactly the
+post-watermark extents" the same way the rebuild tests assert streamed
+page counts.
+
+``stream_store`` is the checkpoint-refactor surface: rebuild a lost
+``CheckpointStore`` replica by streaming the donor's committed bytes
+block-by-block through both stores' public read/write paths — counted like
+transport traffic — instead of ``shutil.copyfile``-ing the device file
+(checkpoint/replicated.py).
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.compute.functions import py_blocksum
+
+_FILE_MAGIC = b"DBSXPRT1"
+_HEADER_BYTES = 512              # fixed header block, rewritten last
+_SEC_MAGIC = 0x54435853          # "SXCT"
+_FRAME = struct.Struct("<II")    # magic, body_len
+_SUM = struct.Struct("<i")
+
+
+class ExportCounters:
+    """Transport-style accounting for the export plane: one ``sent``
+    counter per verb plus the extents/bytes actually moved."""
+
+    def __init__(self):
+        self.sent = collections.Counter()    # EXPORT / INSTALL / STREAM
+        self.extents_moved = 0               # delta extents shipped
+        self.pages_moved = 0                 # == extents_moved (one page per
+                                             # extent — transport naming)
+        self.bytes_moved = 0
+
+    def account(self, verb: str, extents: int, nbytes: int) -> None:
+        self.sent[verb] += 1
+        self.extents_moved += extents
+        self.pages_moved += extents
+        self.bytes_moved += nbytes
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"sent": dict(self.sent), "extents_moved": self.extents_moved,
+                "pages_moved": self.pages_moved,
+                "bytes_moved": self.bytes_moved}
+
+
+def _pack_section(scalars: Dict[str, Any],
+                  arrays: Dict[str, np.ndarray]) -> bytes:
+    """One checksummed section frame: json meta + concatenated raw arrays."""
+    metas, blobs, off = [], [], 0
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        raw = arr.tobytes()
+        metas.append({"name": name, "dtype": str(arr.dtype),
+                      "shape": list(arr.shape), "offset": off,
+                      "nbytes": len(raw)})
+        blobs.append(raw)
+        off += len(raw)
+    head = json.dumps({"scalars": scalars, "arrays": metas}).encode()
+    body = struct.pack("<I", len(head)) + head + b"".join(blobs)
+    return _FRAME.pack(_SEC_MAGIC, len(body)) + body + _SUM.pack(
+        py_blocksum(body))
+
+
+def _unpack_section(body: bytes) -> Tuple[Dict[str, Any],
+                                          Dict[str, np.ndarray]]:
+    (hlen, ) = struct.unpack_from("<I", body, 0)
+    meta = json.loads(body[4:4 + hlen])
+    base = 4 + hlen
+    arrays = {}
+    for ent in meta["arrays"]:
+        off = base + ent["offset"]
+        arr = np.frombuffer(body, np.dtype(ent["dtype"]),
+                            count=int(np.prod(ent["shape"], dtype=np.int64))
+                            if ent["shape"] else 1,
+                            offset=off)
+        arrays[ent["name"]] = arr.reshape(ent["shape"]).copy()
+    return meta["scalars"], arrays
+
+
+def _flat_group(mgr):
+    """The flat ``ReplicaGroup`` behind a slots/loop/fused manager — the
+    backends whose device state installs wholesale. Raises on the rest
+    (host/sharded/ring recover via full-journal replay instead)."""
+    storage = mgr.engine.backend
+    if (storage is None or not hasattr(storage, "device_page_revs")
+            or hasattr(storage, "states")):       # sharded: stacked axis
+        raise ValueError(
+            f"backend {mgr.backend_name!r} has no installable flat replica "
+            "plane; recovery falls back to full-journal replay")
+    if getattr(storage, "null_storage", False):
+        raise ValueError("null_storage holds no pool to export")
+    return storage
+
+
+class SnapshotExport:
+    """One versioned incremental-export file (module docstring)."""
+
+    def __init__(self, path: str):
+        self.path = os.fspath(path)
+        self.counters = ExportCounters()
+        self._sections: List[Tuple[Dict[str, Any],
+                                   Dict[str, np.ndarray]]] = []
+        if os.path.exists(self.path) and os.path.getsize(self.path) > 0:
+            self._load()
+
+    # ------------------------------------------------------------ file I/O
+    def _load(self) -> None:
+        with open(self.path, "rb") as f:
+            blob = f.read()
+        if blob[:len(_FILE_MAGIC)] != _FILE_MAGIC:
+            raise IOError(f"{self.path}: not an export file")
+        hdr = json.loads(
+            blob[len(_FILE_MAGIC):_HEADER_BYTES].split(b"\x00")[0])
+        off = _HEADER_BYTES
+        self._sections = []
+        for _ in range(hdr["sections"]):          # only the committed count
+            magic, blen = _FRAME.unpack_from(blob, off)
+            end = off + _FRAME.size + blen + _SUM.size
+            if magic != _SEC_MAGIC or end > len(blob):
+                raise IOError(f"{self.path}: committed section torn")
+            body = blob[off + _FRAME.size:end - _SUM.size]
+            (want, ) = _SUM.unpack_from(blob, end - _SUM.size)
+            if py_blocksum(body) != want:
+                raise IOError(f"{self.path}: committed section checksum "
+                              "mismatch")
+            self._sections.append(_unpack_section(body))
+            off = end
+
+    def _commit(self, frame: bytes) -> None:
+        """Append the section, flush, THEN rewrite the header — the torn-
+        append-safe ordering (a crash between the two keeps the old count)."""
+        new = not os.path.exists(self.path) or os.path.getsize(self.path) == 0
+        mode = "r+b" if not new else "wb"
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(self.path, mode) as f:
+            if new:
+                f.write(_FILE_MAGIC.ljust(_HEADER_BYTES, b"\x00"))
+            f.seek(0, os.SEEK_END)
+            f.write(frame)
+            f.flush()
+            os.fsync(f.fileno())
+            hdr = json.dumps({"sections": len(self._sections)}).encode()
+            f.seek(0)
+            f.write((_FILE_MAGIC + hdr).ljust(_HEADER_BYTES, b"\x00"))
+            f.flush()
+            os.fsync(f.fileno())
+
+    # ------------------------------------------------------------ export
+    @property
+    def sections(self) -> int:
+        return len(self._sections)
+
+    @property
+    def journal_seq(self) -> int:
+        """Journal position the newest section covers (0 = none): recovery
+        replays only records sealed after this."""
+        return (int(self._sections[-1][0]["journal_seq"])
+                if self._sections else 0)
+
+    def _last_watermark(self) -> Optional[np.ndarray]:
+        return (self._sections[-1][1]["page_rev"]
+                if self._sections else None)
+
+    def export(self, mgr, *, journal=None) -> Dict[str, Any]:
+        """Ship one incremental section from a flat-replica-plane manager.
+        Flushes first (the section covers every acked op), selects the
+        post-watermark extents, appends, commits. Returns the section
+        summary (``extents_moved`` is THE exactness assertion handle)."""
+        mgr.flush()
+        storage = _flat_group(mgr)
+        state = storage.replicas[storage.healthy_indices()[0]].state
+        pool, page_rev = self._device_pool_view(mgr, storage)
+        table = np.asarray(jax.device_get(state.table))
+        leaves, _ = jax.tree_util.tree_flatten(state)
+        leaves = [np.asarray(x) for x in jax.device_get(leaves)]
+        last = self._last_watermark()
+        target = (np.zeros_like(page_rev) if last is None else last)
+        newer = (page_rev > target) & (table >= 0)
+        delta = np.unique(table[newer]).astype(np.int32)
+        rows = pool[delta] if delta.size else pool[:0]
+        scalars = {
+            "journal_seq": int(journal.seq) if journal is not None else 0,
+            "version": len(self._sections) + 1,
+            "vids": sorted(int(v) for v in mgr.volumes),
+            "pool_rows": int(pool.shape[0]),
+        }
+        arrays = {"page_rev": page_rev, "delta_extents": delta,
+                  "delta_rows": rows}
+        for i, leaf in enumerate(leaves):
+            arrays[f"state_{i}"] = leaf
+        frame = _pack_section(scalars, arrays)
+        self._sections.append((scalars, arrays))
+        self._commit(frame)
+        self.counters.account("EXPORT", int(delta.size), rows.nbytes)
+        return {"version": scalars["version"],
+                "extents_moved": int(delta.size),
+                "bytes_moved": int(rows.nbytes),
+                "journal_seq": scalars["journal_seq"]}
+
+    @staticmethod
+    def _device_pool_view(mgr, storage) -> Tuple[np.ndarray, np.ndarray]:
+        """Replica 0's pool + page_rev as host arrays. On a tiered fused
+        backend the spilled rows are zeros ON DEVICE — their bytes live in
+        the tier's host store, so the view reads through the tier."""
+        i0 = storage.healthy_indices()[0]
+        pool = np.asarray(jax.device_get(storage.replicas[i0].pool))
+        page_rev = np.asarray(jax.device_get(storage.replicas[i0].page_rev))
+        tier = getattr(mgr.engine.impl, "tier", None)
+        if tier is not None:
+            pool = tier.read_through(pool)
+        return pool, page_rev
+
+    # ------------------------------------------------------------ install
+    def install(self, mgr) -> Dict[str, Any]:
+        """Reconstruct device state on a FRESH manager of the same geometry:
+        metadata from the newest section, pool rows replayed section-by-
+        section (later rows win), broadcast to every healthy replica."""
+        if not self._sections:
+            raise ValueError(f"{self.path}: no committed section to install")
+        storage = _flat_group(mgr)
+        import jax.numpy as jnp
+        idx = storage.healthy_indices()
+        cur = storage.replicas[idx[0]].state
+        cur_leaves, treedef = jax.tree_util.tree_flatten(cur)
+        scalars, arrays = self._sections[-1]
+        leaves_np = []
+        for i, like in enumerate(cur_leaves):
+            got = arrays[f"state_{i}"]
+            like_np = np.asarray(like)
+            # compare sizes, not shapes: scalar leaves drift between () and
+            # (1,) depending on whether the state passed through a jitted
+            # step before export
+            if got.size != like_np.size:
+                raise ValueError(
+                    f"export geometry mismatch: state leaf {i} is "
+                    f"{tuple(got.shape)} on disk, {tuple(like_np.shape)} "
+                    "here")
+            leaves_np.append(got.astype(like_np.dtype).reshape(like_np.shape))
+        rows_total = int(scalars["pool_rows"])
+        pool = np.zeros((rows_total,)
+                        + tuple(storage.replicas[idx[0]].pool.shape[1:]),
+                        np.float32)
+        moved = 0
+        for sc, ar in self._sections:
+            d, r = ar["delta_extents"], ar["delta_rows"]
+            if d.size:
+                pool[d] = r
+                moved += int(d.size)
+        # one DISTINCT device buffer per replica: the fused step donates
+        # every replica's state/pool, so replicas must not alias
+        storage.set_device_state(
+            tuple(jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(l) for l in leaves_np]) for _ in idx),
+            tuple(jnp.asarray(pool) for _ in idx))
+        storage.set_device_page_revs(
+            tuple(jnp.asarray(arrays["page_rev"]) for _ in idx))
+        tier = getattr(mgr.engine.impl, "tier", None)
+        if tier is not None:
+            tier.reset_resident()        # everything device-resident again
+        from repro.core.blockdev import Volume
+        for vid in scalars["vids"]:
+            mgr.volumes.setdefault(int(vid), Volume(mgr, int(vid)))
+        self.counters.account("INSTALL", moved, pool.nbytes)
+        return {"version": int(scalars["version"]),
+                "journal_seq": int(scalars["journal_seq"]),
+                "extents_replayed": moved, "vids": list(scalars["vids"])}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rebuild rides this surface (checkpoint/replicated.py)
+# ---------------------------------------------------------------------------
+def stream_store(donor, target, *, chunk_blocks: int = 64,
+                 counters: Optional[ExportCounters] = None
+                 ) -> Dict[str, Any]:
+    """Rebuild a checkpoint replica by STREAMING the donor's committed
+    volumes through both stores' public block paths — the export-plane
+    analogue of the engine's chunked FETCH_PAGES/PUSH_PAGES rebuild — with
+    transport-style accounting, replacing the old ``shutil.copyfile``.
+
+    For every donor volume, the valid manifest (header + digest walk,
+    ``CheckpointStore._read_valid``) picks the committed version, its data
+    blocks are read in ``chunk_blocks`` chunks and written into the target
+    store, and the target freezes a snapshot — the same commit ordering
+    ``save`` uses, so a crash mid-stream leaves the target's head torn but
+    never a frozen version."""
+    from repro.checkpoint.store import BS
+    counters = counters or ExportCounters()
+    streamed: Dict[str, int] = {}
+    for name in list(donor.dev.volumes):
+        if name.startswith("__restore_"):
+            continue
+        try:
+            blob = donor._read_valid(name)
+        except IOError:
+            continue
+        man = blob["manifest"]
+        data_end = (1 + blob["manifest_blocks"]) * BS + man["total"]
+        total_blocks = data_end // BS
+        if name not in target.dev.volumes:
+            target.dev.create_volume(name)
+        moved = 0
+        for b0 in range(0, total_blocks, chunk_blocks):
+            nb = min(chunk_blocks, total_blocks - b0)
+            raw = donor.dev.read(blob["volume"], b0 * BS, nb * BS)
+            target.dev.write(name, b0 * BS, raw)
+            moved += nb
+            counters.account("STREAM", nb, nb * BS)
+        target.dev.snapshot(name)                 # version committed
+        if blob["volume"] != name:                # _read_valid's temp clone
+            donor.dev.delete_volume(blob["volume"])
+        streamed[name] = moved
+    return {"volumes": streamed, "counters": counters.to_dict()}

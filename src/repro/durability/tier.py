@@ -1,0 +1,200 @@
+"""Cold-extent spill tier for the fused engine (durability pillar 4).
+
+The DBS extent pool is sized at config time and every extent is device-
+resident — capacity is bounded by accelerator memory. ``ExtentTier`` turns
+the pool into a HOT SET: a bounded number of extents stay device-resident,
+cold extents spill to host memory, and spilled extents fault back in when
+a batch touches them. The invariants:
+
+- **Hot path stays one jitted program per pump.** The fused step gains one
+  extra donated operand — ``stamps``, an ``(E+1,)`` int32 of per-extent
+  access ticks — and stamps every extent a batch resolves (reads, write
+  destinations AND CoW sources) with the batch step inside the same
+  program. All spill/fill traffic rides the pump boundary in host code.
+- **Fill before, balance after.** Before a pump the tier resolves the
+  batch's (volume, page) lanes against the table ONCE on the host, and
+  faults every spilled extent the batch needs back in a single batched
+  row-scatter per replica pool. After the pump, if the resident set
+  exceeds the budget, a clock/second-chance sweep over the stamps picks
+  victims: first pass spares extents whose stamp advanced since the hand
+  last saw them, second pass evicts unconditionally. Victim rows are
+  fetched once (write="all" keeps replicas identical, so ONE host copy
+  serves them all) and the device rows are zeroed.
+- **Zeroing spilled rows is safe.** DBS never zeroes freshly allocated
+  extents — a fresh allocation inherits whatever bytes the pool row holds,
+  and every byte a volume can read through a live mapping was either
+  written (faulted in before the write's CoW copy runs) or is a hole
+  (masked to zeros on read). A freed-then-spilled-then-reallocated extent
+  therefore reads zeros, matching the zero-filled oracle.
+
+Enabled with ``EngineConfig(tier=N)`` (or ``tier=dict(device_extents=N)``)
+on the fused engine; ``export.SnapshotExport`` reads *through* the tier
+(``read_through``) so exports see spilled bytes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ExtentTier:
+    """Host-side state of the spill tier: which extents are device-resident,
+    the spilled rows, and the clock hand (module docstring)."""
+
+    def __init__(self, n_extents: int, device_extents: int):
+        if not 0 < device_extents:
+            raise ValueError(f"device_extents must be positive, got "
+                             f"{device_extents}")
+        self.n_extents = int(n_extents)
+        self.device_extents = int(min(device_extents, n_extents))
+        # stamps[e] = step of the last batch that resolved extent e; row E
+        # is the dump slot for the fused step's invalid-lane scatter.
+        self.stamps = jnp.zeros((self.n_extents + 1,), jnp.int32)
+        self.resident = np.ones(self.n_extents, bool)
+        self.spilled: Dict[int, np.ndarray] = {}
+        self._mapped = np.zeros(self.n_extents, bool)
+        self._hand = 0
+        self._seen = np.zeros(self.n_extents, np.int64)
+        self.fills = 0             # fault-in batches
+        self.spills = 0            # eviction sweeps
+        self.extents_filled = 0
+        self.extents_spilled = 0
+
+    # ------------------------------------------------------------- pump hooks
+    def fault_in(self, table_host: np.ndarray, reqs,
+                 pools: Tuple) -> Tuple[Tuple, set]:
+        """Pre-pump fill: resolve the batch's (volume, page) lanes against
+        the host copy of replica-0's table and fault every spilled extent
+        back in with ONE batched row-scatter per replica pool. Returns the
+        (possibly new) pools and the set of extents the batch touches.
+
+        Also reconciles the spill set against the table: only MAPPED extents
+        are ever evicted (below), so the allocator can only hand out extents
+        whose device rows are live — but an extent can be freed *after*
+        spilling (unmap / delete / CoW superseding it). Its content is dead
+        to the data plane the moment it leaves the table, and its device row
+        was zeroed at eviction — exactly the content a fresh allocation is
+        supposed to inherit — so the stale spilled copy is dropped and the
+        row counts as resident again. Without this, a reallocation of a
+        spilled-then-freed extent would later fault stale bytes in over
+        freshly written data."""
+        self._mapped = np.zeros(self.n_extents, bool)
+        self._mapped[table_host[table_host >= 0]] = True
+        for e in [e for e in self.spilled if not self._mapped[e]]:
+            del self.spilled[e]
+            self.resident[e] = True
+        nv, npg = table_host.shape
+        need = set()
+        for r in reqs:
+            if 0 <= r.volume < nv and 0 <= r.page < npg:
+                e = int(table_host[r.volume, r.page])
+                if e >= 0:
+                    need.add(e)
+        fill = sorted(e for e in need if not self.resident[e])
+        if fill:
+            rows = jnp.asarray(np.stack([self.spilled.pop(e) for e in fill]))
+            idx = jnp.asarray(np.asarray(fill, np.int32))
+            pools = tuple(p.at[idx].set(rows) for p in pools)
+            for e in fill:
+                self.resident[e] = True
+            self.fills += 1
+            self.extents_filled += len(fill)
+        return pools, need
+
+    def balance(self, pools: Tuple, protect: Iterable[int] = ()) -> Tuple:
+        """Post-pump eviction: while the MAPPED resident set exceeds the
+        budget, sweep the clock hand over the stamps — first full pass gives
+        a second chance to any extent whose stamp advanced since the hand
+        last passed it, second pass evicts unconditionally. Only extents the
+        table maps are candidates (a free extent holds no live bytes and may
+        be handed out by the allocator any pump — see ``fault_in``); extents
+        in ``protect`` (this batch's working set) are never evicted."""
+        mapped = self._mapped
+        over = int((self.resident & mapped).sum()) - self.device_extents
+        if over <= 0:
+            return pools
+        stamps = np.asarray(jax.device_get(self.stamps))[:self.n_extents]
+        shield = set(protect)
+        victims: list = []
+        taken = set()
+        for ppass in range(2):
+            for _ in range(self.n_extents):
+                if len(victims) >= over:
+                    break
+                e = self._hand
+                self._hand = (self._hand + 1) % self.n_extents
+                if (not self.resident[e] or not mapped[e] or e in shield
+                        or e in taken):
+                    continue
+                if ppass == 0 and stamps[e] > self._seen[e]:
+                    self._seen[e] = stamps[e]    # second chance
+                    continue
+                self._seen[e] = stamps[e]
+                victims.append(e)
+                taken.add(e)
+            if len(victims) >= over:
+                break
+        if not victims:
+            return pools
+        idx_np = np.asarray(victims, np.int32)
+        idx = jnp.asarray(idx_np)
+        # write="all" keeps replica pools identical: one host copy serves all
+        rows = np.asarray(jax.device_get(pools[0][idx]))
+        for j, e in enumerate(victims):
+            self.spilled[e] = rows[j]
+            self.resident[e] = False
+        zero = jnp.zeros((len(victims),) + tuple(pools[0].shape[1:]),
+                         pools[0].dtype)
+        pools = tuple(p.at[idx].set(zero) for p in pools)
+        self.spills += 1
+        self.extents_spilled += len(victims)
+        return pools
+
+    # ------------------------------------------------------------- side doors
+    def read_through(self, pool_host: np.ndarray) -> np.ndarray:
+        """Overlay the spilled rows onto a host copy of a replica pool —
+        the full-content view exports and oracles read."""
+        if not self.spilled:
+            return pool_host
+        out = np.array(pool_host)
+        for e, row in self.spilled.items():
+            out[e] = row
+        return out
+
+    def reset_resident(self) -> None:
+        """Forget all tier state (export install replaced the pools whole);
+        the next balance() re-evicts if the budget is exceeded."""
+        self.resident[:] = True
+        self.spilled.clear()
+        self._mapped[:] = False
+        self._seen[:] = 0
+        self._hand = 0
+        self.stamps = jnp.zeros((self.n_extents + 1,), jnp.int32)
+
+    def to_dict(self) -> dict:
+        return {
+            "device_extents": self.device_extents,
+            "resident": int((self.resident & self._mapped).sum()),
+            "spilled": len(self.spilled),
+            "fills": self.fills, "spills": self.spills,
+            "extents_filled": self.extents_filled,
+            "extents_spilled": self.extents_spilled,
+        }
+
+    def __repr__(self):
+        return (f"ExtentTier(budget={self.device_extents}, "
+                f"resident={int(self.resident.sum())}, "
+                f"spilled={len(self.spilled)})")
+
+
+def as_tier(tier, n_extents: int):
+    """Coerce an ``EngineConfig(tier=...)`` value: None | int budget |
+    dict(device_extents=...) | ExtentTier."""
+    if tier is None or isinstance(tier, ExtentTier):
+        return tier
+    if isinstance(tier, dict):
+        return ExtentTier(n_extents, int(tier["device_extents"]))
+    return ExtentTier(n_extents, int(tier))

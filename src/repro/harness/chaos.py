@@ -22,7 +22,13 @@ Event vocabulary (the scenario catalog in ``runner.py`` composes these):
   the data stream (and any in-flight rebuild traffic),
 - ``straggler`` / ``heal`` — degrade one simnet link's latency mid-trace /
   restore it,
-- ``drop_on`` / ``drop_off`` — raise one simnet link's loss rate / clear it.
+- ``drop_on`` / ``drop_off`` — raise one simnet link's loss rate / clear it,
+- ``crash``               — kill the engine at a pump boundary and recover
+  it from the durability journal (repro/durability); scheduled by
+  ``ChaosConfig.crash_every`` at fixed trace indices (not by weight — a
+  crash must land at predictable pump boundaries), with every second crash
+  also tearing a partial record onto the journal tail first (``arg=1``) to
+  exercise torn-tail truncation.
 
 The scheduler tracks simulated replica health while generating, so it
 emits schedules that are *mostly* valid by construction; the runner still
@@ -56,6 +62,9 @@ class ChaosConfig:
     weights: Tuple[Tuple[str, float], ...] = ()
     straggler_latency: int = 8
     drop_rate: float = 0.2
+    crash_every: int = 0    # >0: crash-and-recover every N trace ops
+                            # (journal-enabled runs only); every 2nd crash
+                            # tears a partial record onto the tail first
 
 
 @dataclass(frozen=True)
@@ -140,4 +149,11 @@ def schedule_chaos(chaos_seed: int, cfg: ChaosConfig, *, n_ops: int,
                             replica=int(rng.integers(n_replicas)))
         if ev is not None:
             events.append(ev)
+    if cfg.crash_every > 0:
+        # fixed-index crash points (trace-indexed pump boundaries), torn
+        # tail on every second one; merged in index order with the rest
+        for k, idx in enumerate(range(cfg.crash_every, n_ops,
+                                      cfg.crash_every)):
+            events.append(ChaosEvent(int(idx), "crash", arg=float(k % 2)))
+        events.sort(key=lambda e: e.index)
     return events

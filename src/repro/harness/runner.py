@@ -40,6 +40,9 @@ scenario = adding one entry (docs/ARCHITECTURE.md walks through it).
 from __future__ import annotations
 
 import hashlib
+import os
+import shutil
+import tempfile
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -76,6 +79,7 @@ class HarnessResult:
     wall_s: float
     digest: str
     compute_checked: int = 0            # COMPUTE SQEs checked vs mirrors
+    crashes: int = 0                    # crash-and-recover events applied
 
     @property
     def ok(self) -> bool:
@@ -94,6 +98,7 @@ class HarnessResult:
             "n_ops": self.n_ops, "completed": self.completed,
             "checked_reads": self.checked_reads,
             "compute_checked": self.compute_checked,
+            "crashes": self.crashes,
             "oracle_ok": self.ok,
             "failures": (self.oracle_failures + self.harness_failures)[:5],
             "events_applied": len(self.events_applied),
@@ -120,10 +125,14 @@ class _Run:
     """One harness execution's mutable state (``run()`` drives it)."""
 
     def __init__(self, mgr: VolumeManager, oracle: ByteOracle,
-                 trace_seed: int):
+                 trace_seed: int, journal_path: Optional[str] = None,
+                 mgr_kwargs: Optional[Dict[str, Any]] = None):
         self.mgr = mgr
         self.oracle = oracle
         self.trace_seed = trace_seed
+        self.journal_path = journal_path    # crash events need the WAL...
+        self.mgr_kwargs = mgr_kwargs or {}  # ...and the geometry to recover
+        self.crashes = 0
         self.storage = mgr.engine.backend
         # sharded replica plane: health is a dense (S, R) mask, not a list
         # of Replica objects — replica chaos mirrors each verb across ALL
@@ -195,8 +204,52 @@ class _Run:
                         ctl("rebuild", shard=s, replica=r)
         return True
 
+    def _crash(self, torn: bool) -> None:
+        """Kill the engine at a pump boundary and recover it from the WAL.
+
+        The crash point is a pump boundary by construction: every pending
+        future is flushed and checked first (exactly the state the journal's
+        last seal covers), then the journal is fsynced and the manager is
+        ABANDONED — never closed, like a dead process. With ``torn`` a
+        half-written record is appended to the journal file first (a crash
+        mid-group-commit), which recovery must detect and truncate. The
+        recovered manager, storage and volume handles replace the dead
+        ones and the trace keeps replaying into them; a recovery that
+        diverges (``RecoveryError`` / id mismatch) aborts the run — unlike
+        guarded chaos verbs, a bad recovery must never replay as a skip."""
+        from repro.core.transport import MSG_WRITE, WireMsg
+        from repro.durability.journal import encode_record
+        from repro.durability.recovery import recover
+        import numpy as np
+        self.flush_burst(None)                  # settle + check in-flight
+        self.mgr.flush(durable=True)            # seal + fsync the WAL
+        dead, jpath = self.mgr, self.journal_path
+        if torn:
+            rec = encode_record(10 ** 9, WireMsg(
+                op=MSG_WRITE, volume=0,
+                pages=np.asarray([0], np.int32),
+                blocks=np.asarray([0], np.int32),
+                payload=np.zeros((1, 4), np.float32)))
+            with open(jpath, "ab") as f:        # crash mid-append: half a
+                f.write(rec[:len(rec) // 2])    # record past the last seal
+        del dead                                # abandoned, not closed
+        new = recover(jpath, **self.mgr_kwargs)
+        self.mgr = new
+        self.storage = new.engine.backend
+        self.vols = [new.open(v.vid) for v in self.vols]
+        self.clones = [new.open(v.vid) for v in self.clones]
+        self.crashes += 1
+
     def apply_event(self, ev: ChaosEvent) -> None:
         name = f"@{ev.index} {ev.action}"
+        if ev.action == "crash":
+            if self.journal_path is None:
+                self.skipped.append(name + " (no journal)")
+                return
+            torn = ev.arg >= 1.0
+            self._crash(torn)
+            self.applied.append(name + (" torn" if torn else ""))
+            return
         ctl = self.mgr.engine.control
         healthy = _healthy_replicas(self.storage)
         try:
@@ -466,7 +519,7 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         transport_opts: Optional[Dict[str, Any]] = None,
         geometry: Optional[Dict[str, int]] = None,
         verify_replicas: bool = True, strict: bool = False,
-        compute_every: int = 0) -> HarnessResult:
+        compute_every: int = 0, journal: bool = False) -> HarnessResult:
     """One harness execution (module docstring). ``trace_ops`` /
     ``chaos_events`` bypass the generators (hand-crafted tests); otherwise
     both derive from the seeds. ``strict=True`` raises ``OracleMismatch``
@@ -474,7 +527,10 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
     mixes one COMPUTE SQE (rotating through the built-in storage
     functions) into the stream every N trace ops, each checked against
     its pure-Python mirror over the oracle shadow; 0 (the default) leaves
-    the stream — and the replay digest — untouched."""
+    the stream — and the replay digest — untouched. ``journal=True``
+    attaches a write-ahead journal (repro/durability) in a temp dir —
+    required by ``crash`` chaos events (``ChaosConfig.crash_every``),
+    which abandon the manager mid-trace and recover it from the WAL."""
     trace = trace or TraceConfig()
     geo = dict(GEOMETRY)
     geo.update(geometry or {})
@@ -483,7 +539,7 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         # of the replay identity — derive it from chaos_seed unless pinned
         transport_opts = dict(transport_opts or {})
         transport_opts.setdefault("seed", chaos_seed)
-    mgr = VolumeManager(
+    mgr_kwargs = dict(
         backend=backend, n_shards=n_shards, n_replicas=n_replicas,
         payload_elems=geo["block_bytes"], page_blocks=geo["page_blocks"],
         max_pages=geo["n_pages"], n_extents=geo["n_extents"],
@@ -491,8 +547,14 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
         n_slots=geo["n_slots"], batch=geo["batch"], kernel=kernel,
         transport=transport, write_policy=write_policy,
         read_policy=read_policy, transport_opts=transport_opts)
+    jdir = journal_path = None
+    if journal:
+        jdir = tempfile.mkdtemp(prefix="repro-harness-wal-")
+        journal_path = os.path.join(jdir, "wal.dbsj")
+    mgr = VolumeManager(journal=journal_path, **mgr_kwargs)
     oracle = ByteOracle(mgr.capacity)
-    st = _Run(mgr, oracle, trace_seed)
+    st = _Run(mgr, oracle, trace_seed, journal_path=journal_path,
+              mgr_kwargs=mgr_kwargs)
     if trace_ops is None:
         trace_ops = generate_trace(
             trace_seed, trace, block_bytes=geo["block_bytes"],
@@ -535,9 +597,9 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
             h.update(b"|retx:" + ",".join(
                 map(str, counters["per_link_retransmits"])).encode())
         result = HarnessResult(
-            n_ops=len(trace_ops), completed=mgr.engine.completed,
+            n_ops=len(trace_ops), completed=st.mgr.engine.completed,
             checked_reads=oracle.checked_reads,
-            compute_checked=st.compute_checked,
+            compute_checked=st.compute_checked, crashes=st.crashes,
             oracle_failures=list(oracle.failures),
             harness_failures=st.harness_failures,
             events_applied=st.applied, events_skipped=st.skipped,
@@ -546,7 +608,9 @@ def run(*, trace_seed: int = 0, chaos_seed: int = 0,
             wait=stats.latency_lanes(st.wait),
             counters=counters, wall_s=wall, digest=h.hexdigest())
     finally:
-        mgr.close()
+        st.mgr.close()          # a crash may have replaced the manager
+        if jdir is not None:
+            shutil.rmtree(jdir, ignore_errors=True)
     if strict:
         result.raise_if_failed()
     return result
@@ -632,6 +696,26 @@ SCENARIOS: Dict[str, Dict[str, Any]] = {
                           unaligned_frac=0.1),
         chaos=ChaosConfig(n_events=8, weights=_CTRL_ONLY),
         compute_every=5, verify_replicas=True),
+    # the durability plane (repro/durability): a write-ahead journal rides
+    # the run and the engine is KILLED at fixed pump boundaries (every
+    # second crash first tears a half-written record onto the WAL tail),
+    # recovered by journal replay, and the trace keeps going — snapshot/
+    # clone/discard chaos and mutating COMPUTE SQEs ride along so replay
+    # exercises the id-asserting control path and OP_COMPUTE records too.
+    # The end-of-trace sweep proves every recovered volume byte-identical
+    # to the shadow oracle. Replica and link actions are zeroed: recovery
+    # rebuilds an all-healthy plane, so mid-trace health chaos would just
+    # skip nondeterministically relative to the crash points.
+    "crash/journal": dict(
+        backend="slots", n_replicas=2, transport="local",
+        trace=TraceConfig(n_ops=160, n_volumes=4, read_frac=0.4,
+                          unaligned_frac=0.15),
+        chaos=ChaosConfig(n_events=6, crash_every=40,
+                          weights=(("fail", 0.0), ("rebuild", 0.0),
+                                   ("quorum_loss", 0.0), ("recover", 0.0),
+                                   ("straggler", 0.0), ("heal", 0.0),
+                                   ("drop_on", 0.0), ("drop_off", 0.0))),
+        journal=True, compute_every=8),
 }
 
 # the replay-determinism gate re-runs this scenario and compares digests

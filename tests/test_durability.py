@@ -1,0 +1,520 @@
+"""Durability subsystem (ISSUE 10): write-ahead journal, crash recovery,
+incremental snapshot export, and the cold-extent spill tier.
+
+Contracts:
+
+1. **journal format** — record encode/decode roundtrips every WireMsg
+   field the journal carries; the reader commits records batch-by-batch at
+   each seal, drops unsealed records, and stops at the first torn/short/
+   mis-summed frame; reopening a journal truncates the torn tail and
+   resumes the sequence numbering.
+2. **crash-at-every-pump-boundary recovery** — on host/fused/sharded/ring,
+   abandoning the manager (never closed — a dead process) after each
+   durable flush and recovering from the WAL yields volumes byte-identical
+   to a bytearray shadow oracle, through writes (aligned and unaligned),
+   snapshots, clones and discards; a half-written record torn onto the
+   tail is detected and dropped.
+3. **incremental export exactness** — each ``export()`` ships exactly the
+   extents backing pages whose ``page_rev`` advanced past the previous
+   section's watermark (transport-style counters are the assertion
+   handle); install + tail replay recovers a fused manager from the last
+   export plus only the records sealed after it; backends without a flat
+   replica plane fall back to full-journal replay.
+4. **spill tier** — at 2x pool over-subscription the fused engine serves
+   every byte correctly (spills and fills both observed), CoW snapshots
+   and clones keep frozen images, and ``tier=`` on a non-fused backend is
+   a config error.
+5. **checkpoint stream rebuild** — a lost ``ReplicatedCheckpoint`` replica
+   rebuilds by streaming the donor's committed volumes through the public
+   block paths, with STREAM-verb accounting.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.blockdev import VolumeManager
+from repro.core.transport import MSG_SNAPSHOT, MSG_UNMAP, MSG_WRITE, WireMsg
+from repro.durability import (ExtentTier, Journal, OP_COMPUTE, OP_SEAL,
+                              SnapshotExport, read_journal, recover)
+from repro.durability.journal import decode_record, encode_record
+
+BB = 16         # block_bytes
+PB = 4          # page_blocks -> page_bytes = 64
+PAGES = 8       # capacity = 512 bytes per volume
+
+# the recovery acceptance matrix: flat replica plane (fused installs
+# exports wholesale) and the full-replay fallbacks (host/sharded/ring)
+MATRIX = [("host", 1), ("fused", 1), ("sharded", 2), ("ring", 2)]
+
+
+def _kw(backend: str, n_shards: int = 1, **kw) -> dict:
+    base = dict(backend=backend, n_shards=n_shards, payload_elems=BB,
+                page_blocks=PB, max_pages=PAGES, n_extents=256,
+                max_volumes=16, batch=16, n_replicas=2)
+    base.update(kw)
+    return base
+
+
+def _pat(seed: int, n: int) -> bytes:
+    return bytes((seed * 37 + i * 11) % 251 for i in range(n))
+
+
+# ---------------------------------------------------------------------------
+# 1. journal format
+# ---------------------------------------------------------------------------
+def test_np_blocksum_matches_py_blocksum():
+    """The journal's vectorized record checksum is the SAME rotate/XOR
+    fold the compute registry runs in-band."""
+    from repro.compute.functions import (np_blocksum, np_blocksum_many,
+                                         py_blocksum)
+    rng = np.random.default_rng(7)
+    for n in (0, 1, 30, 31, 32, 63, 257, 4096):
+        blob = bytes(rng.integers(0, 256, n, dtype=np.uint8))
+        assert np_blocksum(blob) == py_blocksum(blob)
+    blobs = [bytes(rng.integers(0, 256, n, dtype=np.uint8))
+             for n in (27, 1, 31, 32, 100, 313)]
+    assert np_blocksum_many(blobs) == [py_blocksum(b) for b in blobs]
+
+
+def test_coalesce_writes_merges_adjacent_same_volume():
+    from repro.durability.journal import coalesce_writes
+    w = [WireMsg(op=MSG_WRITE, volume=0, pages=[i], blocks=[i % PB],
+                 payload=bytes([i] * BB)) for i in range(3)]
+    other = WireMsg(op=MSG_WRITE, volume=1, pages=[5], blocks=[0],
+                    payload=bytes(BB))
+    ctl = WireMsg(op=MSG_SNAPSHOT, volume=0, meta=(1, 0))
+    out = coalesce_writes([w[0], w[1], other, ctl, w[2]])
+    assert [m.op for m in out] == [MSG_WRITE, MSG_WRITE, MSG_SNAPSHOT,
+                                   MSG_WRITE]
+    merged = out[0]                   # w0+w1: one record, order preserved
+    assert merged.pages == [0, 1] and merged.blocks == [0, 1]
+    assert merged.payload == w[0].payload + w[1].payload
+    assert out[1].volume == 1 and out[3].pages == [2]
+    # ndarray-shaped records (tests/tools) pass through unmerged
+    nd = WireMsg(op=MSG_WRITE, volume=0, pages=np.asarray([0], np.int32),
+                 blocks=np.asarray([0], np.int32),
+                 payload=np.zeros((1, BB), np.float32))
+    assert len(coalesce_writes([nd, nd])) == 2
+
+
+def test_record_roundtrip_write():
+    lanes = np.arange(2 * BB, dtype=np.float32).reshape(2, BB)
+    msg = WireMsg(op=MSG_WRITE, volume=3, pages=np.asarray([1, 2], np.int32),
+                  blocks=np.asarray([0, 3], np.int32), payload=lanes)
+    rec = encode_record(7, msg)
+    back = decode_record(rec[12:-4])          # strip frame + checksum
+    assert back.op == MSG_WRITE and back.volume == 3
+    np.testing.assert_array_equal(back.pages, [1, 2])
+    np.testing.assert_array_equal(back.blocks, [0, 3])
+    np.testing.assert_array_equal(back.payload, lanes)
+
+
+def test_record_roundtrip_control_and_compute():
+    ctl = decode_record(encode_record(1, WireMsg(
+        op=MSG_SNAPSHOT, volume=2, meta=(9, 0)))[12:-4])
+    assert (ctl.op, ctl.volume, ctl.meta[0]) == (MSG_SNAPSHOT, 2, 9)
+    comp = decode_record(encode_record(2, WireMsg(
+        op=OP_COMPUTE, volume=1, pages=np.asarray([4], np.int32),
+        blocks=np.asarray([2], np.int32), extents=b"compare_and_write",
+        meta=(123, 0), payload=b"\x01\x02\x03"))[12:-4])
+    assert comp.op == OP_COMPUTE
+    assert bytes(comp.extents) == b"compare_and_write"
+    assert comp.meta == (123, 0)
+    assert bytes(comp.payload) == b"\x01\x02\x03"
+
+
+def test_journal_group_commit_and_resume(tmp_path):
+    path = str(tmp_path / "wal.dbsj")
+    j = Journal(path)
+    msgs = [WireMsg(op=MSG_WRITE, volume=0,
+                    pages=np.asarray([i], np.int32),
+                    blocks=np.asarray([0], np.int32),
+                    payload=np.full((1, BB), i, np.float32))
+            for i in range(3)]
+    j.append_batch(msgs)                      # ONE append: 3 records + seal
+    j.append_batch(msgs[:1])
+    assert (j.appends, j.records) == (2, 4)
+    j.sync()
+    j.close()
+    view = read_journal(path)
+    assert len(view.records) == 4 and not view.torn and view.dropped == 0
+    assert [s for s, _ in view.records] == [1, 2, 3, 5]   # 4 is the seal
+    j2 = Journal(path)                        # resume: seq continues
+    assert j2.seq == view.last_seq
+    j2.append_batch(msgs[:1])
+    assert j2.seq == view.last_seq + 2
+    j2.close()
+
+
+def test_torn_tail_detected_and_truncated(tmp_path):
+    path = str(tmp_path / "wal.dbsj")
+    j = Journal(path)
+    j.append_batch([WireMsg(op=MSG_UNMAP, volume=0,
+                            pages=np.asarray([1], np.int32))])
+    j.close()
+    good = os.path.getsize(path)
+    rec = encode_record(99, WireMsg(op=MSG_UNMAP, volume=1,
+                                    pages=np.asarray([2], np.int32)))
+    with open(path, "ab") as f:               # crash mid-append
+        f.write(rec[:len(rec) // 2])
+    view = read_journal(path)
+    assert view.torn and len(view.records) == 1
+    assert view.valid_bytes == good
+    j2 = Journal(path)                        # reopen truncates the tail
+    j2.close()
+    assert os.path.getsize(path) == good
+    assert not read_journal(path).torn
+
+
+def test_unsealed_records_dropped(tmp_path):
+    path = str(tmp_path / "wal.dbsj")
+    j = Journal(path)
+    j.append_batch([WireMsg(op=MSG_UNMAP, volume=0,
+                            pages=np.asarray([1], np.int32))])
+    j.close()
+    with open(path, "ab") as f:               # two intact but UNSEALED recs
+        f.write(encode_record(50, WireMsg(op=MSG_UNMAP, volume=1,
+                                          pages=np.asarray([2], np.int32))))
+        f.write(encode_record(51, WireMsg(op=MSG_UNMAP, volume=1,
+                                          pages=np.asarray([3], np.int32))))
+    view = read_journal(path)
+    assert len(view.records) == 1 and view.dropped == 2 and not view.torn
+
+
+def test_corrupt_checksum_tears(tmp_path):
+    path = str(tmp_path / "wal.dbsj")
+    j = Journal(path)
+    j.append_batch([WireMsg(op=MSG_UNMAP, volume=0,
+                            pages=np.asarray([1], np.int32))])
+    j.append_batch([WireMsg(op=MSG_UNMAP, volume=0,
+                            pages=np.asarray([2], np.int32))])
+    j.close()
+    view0 = read_journal(path)
+    with open(path, "r+b") as f:              # flip one body byte of the
+        f.seek(os.path.getsize(path) - 20)    # last batch
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    view = read_journal(path)
+    assert view.torn and len(view.records) < len(view0.records)
+
+
+# ---------------------------------------------------------------------------
+# 2. crash-at-every-pump-boundary recovery vs the shadow oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,n_shards", MATRIX)
+def test_crash_at_every_pump_boundary(tmp_path, backend, n_shards):
+    kw = _kw(backend, n_shards)
+    jp = str(tmp_path / "wal.dbsj")
+    mgr = VolumeManager(journal=jp, **kw)
+    cap = mgr.capacity
+    shadow = {}
+    for _ in range(2):
+        shadow[mgr.create().vid] = bytearray(cap)
+    vids = sorted(shadow)
+    try:
+        for burst in range(6):
+            for i in range(3):
+                vid = vids[(burst + i) % len(vids)]
+                off = ((burst * 37 + i * 13) * 7) % (cap - 64)
+                n = 9 + (burst * 11 + i * 5) % 48      # unaligned spans too
+                data = _pat(burst * 10 + i, n)
+                mgr.pwrite(vid, off, data)
+                shadow[vid][off:off + n] = data
+            if burst == 2:
+                mgr.snapshot(vids[0])
+            if burst == 3:
+                child = mgr.clone(vids[0])
+                assert child is not None
+                shadow[child.vid] = bytearray(shadow[vids[0]])
+                vids.append(child.vid)
+            if burst == 4:
+                mgr.discard(vids[1], 32, 3 * mgr.page_bytes)
+                shadow[vids[1]][32:32 + 3 * mgr.page_bytes] = bytes(
+                    3 * mgr.page_bytes)
+            mgr.flush(durable=True)
+            if burst % 2 == 1:                # every 2nd crash mid-append
+                rec = encode_record(10 ** 9, WireMsg(
+                    op=MSG_WRITE, volume=0,
+                    pages=np.asarray([0], np.int32),
+                    blocks=np.asarray([0], np.int32),
+                    payload=np.zeros((1, BB), np.float32)))
+                with open(jp, "ab") as f:
+                    f.write(rec[:len(rec) // 2])
+            mgr = recover(jp, **kw)           # dead mgr abandoned, not closed
+            info = mgr.recovery_info
+            assert info["replayed"] == info["sealed_records"] > 0
+            assert info["torn_tail"] == (burst % 2 == 1)
+            for vid in vids:
+                got = mgr.open(vid).read(0, cap)
+                assert got == bytes(shadow[vid]), (
+                    f"{backend}: vol {vid} diverged after crash {burst}")
+    finally:
+        mgr.close()
+
+
+def test_recovered_manager_keeps_journaling(tmp_path):
+    """Reattach: the recovered manager appends to the same file, and a
+    SECOND crash+recovery replays both generations of records."""
+    kw = _kw("fused")
+    jp = str(tmp_path / "wal.dbsj")
+    mgr = VolumeManager(journal=jp, **kw)
+    vid = mgr.create().vid
+    mgr.pwrite(vid, 0, _pat(1, 100))
+    mgr.flush(durable=True)
+    mgr = recover(jp, **kw)
+    mgr.pwrite(vid, 50, _pat(2, 100))         # journaled via the reattached
+    mgr.flush(durable=True)                   # handle
+    mgr = recover(jp, **kw)
+    want = bytearray(mgr.capacity)
+    want[0:100] = _pat(1, 100)
+    want[50:150] = _pat(2, 100)
+    assert mgr.open(vid).read(0, mgr.capacity) == bytes(want)
+    assert mgr.recovery_info["replayed"] >= 3  # create + both writes
+    mgr.close()
+
+
+def test_replay_refuses_attached_journal(tmp_path):
+    from repro.durability.recovery import replay
+    jp = str(tmp_path / "wal.dbsj")
+    mgr = VolumeManager(journal=jp, **_kw("host"))
+    mgr.create()
+    mgr.flush(durable=True)
+    with pytest.raises(ValueError, match="detach"):
+        replay(mgr, read_journal(jp))
+    mgr.close()
+
+
+def test_mutating_compute_journaled_and_replayed(tmp_path):
+    """compare_and_write is write-ahead logged (OP_COMPUTE) and re-runs on
+    replay; read-only functions leave no record."""
+    from repro.compute.functions import py_blocksum
+    kw = _kw("ring", 2)
+    jp = str(tmp_path / "wal.dbsj")
+    mgr = VolumeManager(journal=jp, **kw)
+    vid = mgr.create().vid
+    old = _pat(3, BB)
+    mgr.pwrite(vid, 0, old)
+    mgr.flush()
+    new = _pat(4, BB)
+    res = mgr.compute(vid, "compare_and_write", 0, BB,
+                      arg=py_blocksum(old), data=new).result()
+    assert res.ok
+    mgr.compute(vid, "checksum").result()     # read-only: not journaled
+    mgr.flush(durable=True)
+    ops = [m.op for _, m in read_journal(jp).records]
+    assert ops.count(OP_COMPUTE) == 1
+    mgr = recover(jp, **kw)
+    assert mgr.open(vid).read(0, BB) == new
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# 3. incremental export: watermark exactness, install + tail replay
+# ---------------------------------------------------------------------------
+def test_export_ships_exactly_the_delta(tmp_path):
+    kw = _kw("fused")
+    mgr = VolumeManager(**kw)
+    vid = mgr.create().vid
+    pby = mgr.page_bytes
+    for p in range(4):                        # map 4 extents
+        mgr.pwrite(vid, p * pby, _pat(p, pby))
+    mgr.flush()
+    exp = SnapshotExport(str(tmp_path / "inc.dbsx"))
+    first = exp.export(mgr)
+    assert first["extents_moved"] == 4
+    mgr.pwrite(vid, 1 * pby, _pat(9, pby))    # touch exactly 2 pages
+    mgr.pwrite(vid, 3 * pby, _pat(8, pby))
+    mgr.flush()
+    second = exp.export(mgr)
+    assert second["extents_moved"] == 2       # the post-watermark extents
+    third = exp.export(mgr)                   # nothing moved since
+    assert third["extents_moved"] == 0
+    assert exp.counters.sent["EXPORT"] == 3
+    assert exp.counters.extents_moved == 6
+    mgr.close()
+
+
+def test_export_install_plus_tail_replay(tmp_path):
+    kw = _kw("fused")
+    jp = str(tmp_path / "wal.dbsj")
+    xp = str(tmp_path / "inc.dbsx")
+    mgr = VolumeManager(journal=jp, **kw)
+    vid = mgr.create().vid
+    mgr.pwrite(vid, 0, _pat(1, 200))
+    mgr.flush(durable=True)
+    SnapshotExport(xp).export(mgr, journal=mgr._journal)
+    mgr.pwrite(vid, 100, _pat(2, 200))        # the tail past the export
+    mgr.flush(durable=True)
+    mgr = recover(jp, export=xp, **kw)
+    info = mgr.recovery_info
+    assert info["installed"] is not None and info["after_seq"] > 0
+    assert 0 < info["replayed"] < info["sealed_records"]   # tail only
+    want = bytearray(mgr.capacity)
+    want[0:200] = _pat(1, 200)
+    want[100:300] = _pat(2, 200)
+    assert mgr.open(vid).read(0, mgr.capacity) == bytes(want)
+    mgr.close()
+
+
+def test_export_fallback_to_full_replay(tmp_path):
+    """A backend without a flat replica plane ignores the export and
+    replays the whole journal."""
+    kw = _kw("sharded", 2)
+    jp = str(tmp_path / "wal.dbsj")
+    xp = str(tmp_path / "inc.dbsx")
+    donor = VolumeManager(**_kw("fused"))     # export from a fused twin
+    donor.create()
+    donor.flush()
+    SnapshotExport(xp).export(donor)
+    donor.close()
+    mgr = VolumeManager(journal=jp, **kw)
+    vid = mgr.create().vid
+    mgr.pwrite(vid, 0, _pat(5, 300))
+    mgr.flush(durable=True)
+    mgr = recover(jp, export=xp, **kw)
+    info = mgr.recovery_info
+    assert info["installed"] is None and info["after_seq"] == 0
+    assert mgr.open(vid).read(0, 300) == _pat(5, 300)
+    mgr.close()
+
+
+def test_export_reload_from_disk(tmp_path):
+    """A reopened export file sees the committed sections (header count),
+    and install replays sections in order — later rows win."""
+    kw = _kw("fused")
+    xp = str(tmp_path / "inc.dbsx")
+    mgr = VolumeManager(**kw)
+    vid = mgr.create().vid
+    pby = mgr.page_bytes
+    exp = SnapshotExport(xp)
+    mgr.pwrite(vid, 0, _pat(1, pby))
+    mgr.flush()
+    exp.export(mgr)
+    mgr.pwrite(vid, 0, _pat(2, pby))          # same page, newer content
+    mgr.flush()
+    exp.export(mgr)
+    mgr.close()
+    exp2 = SnapshotExport(xp)                 # reload
+    assert exp2.sections == 2
+    fresh = VolumeManager(**kw)
+    try:
+        exp2.install(fresh)
+        assert fresh.open(vid).read(0, pby) == _pat(2, pby)
+    finally:
+        fresh.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. the cold-extent spill tier
+# ---------------------------------------------------------------------------
+def test_tier_serves_reads_at_2x_over_subscription():
+    # 2 volumes x PAGES pages = 16 mapped extents vs an 8-extent budget
+    mgr = VolumeManager(tier=PAGES, **_kw("fused"))
+    cap, pby = mgr.capacity, mgr.page_bytes
+    vids = [mgr.create().vid for _ in range(2)]
+    for k, vid in enumerate(vids):
+        for p in range(PAGES):
+            mgr.pwrite(vid, p * pby, _pat(k * 100 + p, pby))
+    mgr.flush()
+    st = mgr.stats()["tier"]
+    assert st["device_extents"] == PAGES
+    assert st["spills"] >= 1 and st["resident"] <= PAGES
+    for k, vid in enumerate(vids):            # every byte served correctly
+        got = mgr.open(vid).read(0, cap)
+        want = b"".join(_pat(k * 100 + p, pby) for p in range(PAGES))
+        assert got == want
+    assert mgr.stats()["tier"]["fills"] >= 1  # reads faulted extents in
+    mgr.close()
+
+
+def test_tier_cow_snapshot_and_clone():
+    mgr = VolumeManager(tier=PAGES, **_kw("fused"))
+    pby = mgr.page_bytes
+    vid = mgr.create().vid
+    for p in range(PAGES):
+        mgr.pwrite(vid, p * pby, _pat(p, pby))
+    child = mgr.clone(vid)
+    for p in range(PAGES // 2):               # CoW: child keeps the frozen
+        mgr.pwrite(vid, p * pby, _pat(50 + p, pby))
+    mgr.flush()
+    for p in range(PAGES):
+        want_v = _pat(50 + p if p < PAGES // 2 else p, pby)
+        assert mgr.open(vid).read(p * pby, pby) == want_v
+        assert child.read(p * pby, pby) == _pat(p, pby)
+    mgr.close()
+
+
+def test_tier_discard_and_reallocate():
+    """A spilled-then-freed extent must NOT fault stale bytes over a fresh
+    allocation (the tier's mapped-only eviction + reconcile rule)."""
+    mgr = VolumeManager(tier=4, **_kw("fused"))
+    pby = mgr.page_bytes
+    vid = mgr.create().vid
+    for p in range(PAGES):
+        mgr.pwrite(vid, p * pby, _pat(p, pby))
+    mgr.flush()                               # force spills (8 mapped vs 4)
+    mgr.discard(vid, 0, mgr.capacity)         # free everything
+    for p in range(PAGES):                    # reallocate with new content
+        mgr.pwrite(vid, p * pby, _pat(70 + p, pby))
+    mgr.flush()
+    for p in range(PAGES):
+        assert mgr.open(vid).read(p * pby, pby) == _pat(70 + p, pby)
+    mgr.close()
+
+
+def test_tier_requires_fused_backend():
+    with pytest.raises(ValueError, match="fused"):
+        VolumeManager(tier=4, **_kw("ring", 2))
+
+
+def test_tier_budget_validation():
+    with pytest.raises(ValueError):
+        ExtentTier(16, 0)
+
+
+# ---------------------------------------------------------------------------
+# 5. checkpoint stream rebuild + the journal in manager stats
+# ---------------------------------------------------------------------------
+def test_checkpoint_rebuild_streams_blocks(tmp_path):
+    from repro.checkpoint import ReplicatedCheckpoint
+    dirs = [str(tmp_path / d) for d in "ab"]
+    for d in dirs:
+        os.makedirs(d)
+    rc = ReplicatedCheckpoint(dirs, capacity_bytes=1 << 24)
+    tree = {"w": np.arange(512, dtype=np.float32).reshape(16, 32)}
+    rc.save("train", 4, tree)
+    rc.fail(1)
+    info = rc.rebuild(1)
+    assert info is rc.last_rebuild
+    assert info["volumes"] and info["counters"]["sent"]["STREAM"] >= 1
+    assert info["counters"]["bytes_moved"] > 0
+    step, back = rc.stores[1].restore("train", like=tree)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(back["w"]), tree["w"])
+    rc.close()
+
+
+def test_stats_expose_journal_counters(tmp_path):
+    jp = str(tmp_path / "wal.dbsj")
+    mgr = VolumeManager(journal=jp, **_kw("fused"))
+    vid = mgr.create().vid
+    for i in range(3):
+        mgr.pwrite(vid, i * BB, _pat(i, BB))
+    mgr.flush(durable=True)
+    js = mgr.stats()["journal"]
+    # create + the 3 adjacent same-volume writes coalesced into ONE record
+    assert js["records"] == 2
+    assert js["appends"] <= 2                 # group commit, not per-op
+    mgr.close()
+
+
+def test_harness_crash_scenario():
+    """The chaos harness's crash/journal scenario: kill at fixed pump
+    boundaries (one torn), recover, oracle sweep clean — and deterministic."""
+    from repro.harness.runner import run_scenario
+    res = run_scenario("crash/journal", n_ops=80)
+    res.raise_if_failed()
+    assert res.crashes == 1
+    assert any("crash" in e for e in res.events_applied)
